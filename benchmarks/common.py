@@ -1,0 +1,28 @@
+"""Shared benchmark utilities: CSV emission in ``name,us_per_call,derived``
+format plus environment-scaled problem sizes."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable
+
+#: scale factor for benchmark sizes (CI containers are small; the paper's
+#: 48-core box is not).  REPRO_BENCH_SCALE=4 approaches paper sizes.
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1"))
+
+PLACES = int(os.environ.get("REPRO_BENCH_PLACES", "4"))
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def timed(fn: Callable, *args, repeats: int = 1, **kw):
+    best = None
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    return out, best

@@ -1,0 +1,149 @@
+"""One benchmark per paper table/figure (Figures 2-9).
+
+Each emits ``name,us_per_call,derived`` CSV rows; the derived column carries
+the figure's actual claim metric (time-to-optimum, one-pass fraction, queue
+churn, work ratio, strip count, steal weights, composition speedup).
+Scheduler variants: ``strategy`` (specialized strategies), ``lifo`` (the
+strategy scheduler running plain LIFO/FIFO — isolates scheduler overhead),
+``deque`` (standard work-stealing baseline).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.apps import (bipartition, prefix_sum, quicksort, sssp, tristrip,
+                        uts)
+from repro.core import SchedulerConfig, StrategyScheduler, spawn_s
+
+from .common import PLACES, SCALE, emit
+
+
+def fig2_3_bipartition(seeds=(0, 1, 2)) -> None:
+    """Fig 2-3: B&B graph bipartitioning, unweighted + weighted."""
+    n = int(18 + 4 * SCALE)
+    for max_w, tag in ((1, "unweighted"), (1000, "weighted")):
+        for variant in ("strategy", "lifo", "deque"):
+            times, opts, explored = [], [], []
+            for seed in seeds:
+                kw = dict(n=n, density=0.5 if max_w == 1 else 0.9,
+                          max_weight=max_w, seed=seed, num_places=PLACES)
+                if variant == "deque":
+                    r = bipartition.run_bipartition(scheduler="deque", **kw)
+                else:
+                    r = bipartition.run_bipartition(
+                        scheduler="strategy",
+                        use_strategy=(variant == "strategy"), **kw)
+                times.append(r["time_s"])
+                opts.append(r["time_to_optimum_s"])
+                explored.append(r["explored"])
+            emit(f"bipartition_{tag}_{variant}", float(np.mean(times)),
+                 f"t_opt={np.mean(opts):.4f}s explored={np.mean(explored):.0f}")
+
+
+def fig4_prefix_sum() -> None:
+    n = int(2e6 * SCALE)
+    for places in (1, PLACES):
+        for variant in ("strategy", "lifo", "deque"):
+            if variant == "deque":
+                r = prefix_sum.run_prefix_sum(n=n, num_places=places,
+                                              scheduler="deque")
+            else:
+                r = prefix_sum.run_prefix_sum(
+                    n=n, num_places=places,
+                    use_strategy=(variant == "strategy"))
+            emit(f"prefix_sum_p{places}_{variant}", r["time_s"],
+                 f"one_pass={r['one_pass_fraction']:.2f} "
+                 f"seq={r['seq_time_s']:.4f}s")
+    # Fig 4b: 12 concurrent prefix sums in ONE scheduler
+    r = prefix_sum.run_concurrent_prefix_sums(
+        k=12, n=max(20_000, n // 12), num_places=PLACES)
+    emit("prefix_sum_12x_strategy", r["time_s"],
+         f"one_pass={r['one_pass_fraction']:.2f}")
+    r = prefix_sum.run_concurrent_prefix_sums(
+        k=12, n=max(20_000, n // 12), num_places=PLACES, scheduler="deque")
+    emit("prefix_sum_12x_deque", r["time_s"],
+         f"one_pass={r['one_pass_fraction']:.2f}")
+
+
+def fig5_uts() -> None:
+    depth = int(11 + 2 * SCALE)
+    for variant in ("strategy", "lifo", "deque"):
+        if variant == "deque":
+            r = uts.run_uts(b0=4.0, max_depth=depth, num_places=PLACES,
+                            scheduler="deque")
+        else:
+            r = uts.run_uts(b0=4.0, max_depth=depth, num_places=PLACES,
+                            use_strategy=(variant == "strategy"))
+        emit(f"uts_t5ish_{variant}", r["time_s"],
+             f"nodes={r['nodes']} churn={r['queue_churn']} "
+             f"conv={r['calls_converted']} nodes_per_s={r['nodes_per_s']:.0f}")
+
+
+def fig6_sssp() -> None:
+    n = int(1500 * max(1.0, SCALE))
+    r = sssp.run_sssp(n=n, density=0.05, num_places=PLACES)
+    emit("sssp_strategy", r["time_s"],
+         f"work_ratio={r['work_ratio']:.3f} dead={r['dead_pruned']} "
+         f"dijkstra={r['seq_time_s']:.4f}s")
+
+
+def fig7_tristrip() -> None:
+    rows = int(48 * max(1.0, SCALE ** 0.5))
+    for variant in ("strategy", "deque"):
+        r = tristrip.run_tristrip(rows=rows, cols=rows, num_places=PLACES,
+                                  scheduler=variant)
+        emit(f"tristrip_{variant}", r["time_s"],
+             f"strips={r['num_strips']} avg_len={r['avg_strip_len']:.1f}")
+
+
+def fig8_quicksort() -> None:
+    n = int(2e6 * SCALE)
+    for variant in ("strategy", "lifo", "deque"):
+        if variant == "deque":
+            r = quicksort.run_quicksort(n=n, num_places=PLACES,
+                                        scheduler="deque")
+        else:
+            r = quicksort.run_quicksort(
+                n=n, num_places=PLACES,
+                use_strategy=(variant == "strategy"))
+        emit(f"quicksort_{variant}", r["time_s"],
+             f"spawns={r['spawns']} conv={r['calls_converted']} "
+             f"w_stolen={r['weight_stolen']}")
+
+
+def fig9_composition() -> None:
+    """Prefix sum + UTS composed in ONE scheduler vs the parts."""
+    import time
+    n = int(1e6 * SCALE)
+    depth = int(11 + SCALE)
+
+    r_prefix = prefix_sum.run_prefix_sum(n=n, num_places=PLACES)
+    r_uts = uts.run_uts(b0=4.0, max_depth=depth, num_places=PLACES)
+
+    from repro.apps.prefix_sum import _State, _finalize, _root as prefix_root
+    from repro.apps.uts import _splitmix64, _uts_task
+
+    x = np.random.default_rng(0).integers(-1000, 1000, n).astype(np.int64)
+    s = _State(x, 4096)
+    counts = np.zeros(PLACES, np.int64)
+    sched = StrategyScheduler(num_places=PLACES,
+                              config=SchedulerConfig(seed=0))
+
+    def root():
+        prefix_root(s, True, 0)
+        _uts_task(counts, _splitmix64(42), 0, 4.0, depth, True)
+
+    t0 = time.perf_counter()
+    sched.run(root)
+    _finalize(s)
+    dt = time.perf_counter() - t0
+    assert np.array_equal(s.out, np.cumsum(x))
+    assert counts.sum() == r_uts["nodes"]
+    sum_parts = r_prefix["time_s"] + r_uts["time_s"]
+    emit("composition_prefix+uts", dt,
+         f"sum_of_parts={sum_parts:.4f}s "
+         f"speedup_vs_parts={sum_parts / max(dt, 1e-9):.2f}x")
+
+
+ALL = [fig2_3_bipartition, fig4_prefix_sum, fig5_uts, fig6_sssp,
+       fig7_tristrip, fig8_quicksort, fig9_composition]

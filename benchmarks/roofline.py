@@ -1,0 +1,144 @@
+"""Roofline table from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape) single-pod cell, three terms in seconds:
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs          (197 TF/s bf16)
+    memory     = HBM_bytes_per_chip / HBM_bw              (819 GB/s)
+    collective = collective_bytes_per_chip / link_bw      (~50 GB/s/link)
+
+Sources: extrapolated whole-step cost_analysis + HLO collective parse (see
+``launch/analyze.py``; the compiled module is the per-chip SPMD program, so
+all numbers are already per-chip).  The CPU backend's "bytes accessed" is an
+UPPER bound on TPU HBM traffic (CPU fuses less), so the memory term is also
+reported against an analytic floor (params+grads+optimizer+activation
+streams); the dominant-term call uses the floor when the two disagree.
+
+Usage:  python -m benchmarks.roofline --dir runs/dryrun [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12       # TPU v5e bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def memory_floor_bytes(rec: Dict) -> Optional[float]:
+    """Analytic per-chip HBM traffic floor for one step."""
+    try:
+        from repro.configs import get_config
+        from repro.launch.input_specs import shape_by_name
+        cfg = get_config(rec["arch"])
+        cell = shape_by_name(rec["shape"])
+    except Exception:
+        return None
+    chips = CHIPS[rec["mesh"]]
+    params_local = rec["param_bytes"] / chips          # sharded params
+    if cell.kind == "train":
+        n_micro = rec.get("microbatches", 1) or 1
+        # params read fwd+bwd+remat-fwd per microbatch + grad write +
+        # optimizer read/write (fp32 m,v + param rw)
+        traffic = params_local * (3 * n_micro + 2) \
+            + (rec["param_bytes"] / 2) / chips * 20   # opt fp32 streams
+        tokens_local = cell.seq_len * cell.global_batch / min(
+            chips, 32 if rec["mesh"] == "2x16x16" else 16)
+        act = tokens_local * cfg.d_model * 2 * 24 * cfg.num_layers
+        return traffic + act / (chips / (32 if rec["mesh"] == "2x16x16"
+                                         else 16))
+    if cell.kind == "prefill":
+        tokens_local = cell.seq_len * cell.global_batch / chips
+        return params_local * 1 + tokens_local * cfg.d_model * 2 * 12 \
+            * cfg.num_layers
+    # decode: every parameter + the whole KV cache is read once per token
+    cache = rec["memory"]["argument_bytes"]            # per chip, incl cache
+    return params_local + cache
+
+
+def load(dir_: str):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def terms(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    ana = rec.get("analysis")
+    if not ana:
+        return None
+    ex = ana["extrapolated"]
+    comp = max(ex["flops"], 0.0) / PEAK_FLOPS
+    mem_hlo = max(ex["bytes"], 0.0) / HBM_BW
+    floor = memory_floor_bytes(rec)
+    mem_floor = (floor / HBM_BW) if floor else None
+    coll = max(ex["coll_bytes"], 0.0) / LINK_BW
+    mem = mem_floor if mem_floor is not None else mem_hlo
+    dom = max(("compute", comp), ("memory", mem),
+              ("collective", coll), key=lambda kv: kv[1])[0]
+    out = {"compute_s": comp, "memory_s_hlo": mem_hlo,
+           "memory_s_floor": mem_floor, "collective_s": coll,
+           "dominant": dom,
+           "hlo_flops_per_chip": ex["flops"],
+           "coll_bytes_per_chip": ex["coll_bytes"]}
+    mf = rec.get("model_flops")
+    try:   # recompute with the current accounting (prefill head, encdec)
+        from repro.configs import get_config
+        from repro.launch.analyze import model_flops
+        from repro.launch.input_specs import shape_by_name
+        mf = model_flops(get_config(rec["arch"]), shape_by_name(rec["shape"]))
+    except Exception:
+        pass
+    if mf:
+        chips = CHIPS[rec["mesh"]]
+        out["model_flops"] = mf
+        out["useful_frac"] = mf / (ex["flops"] * chips)
+        bound = max(comp, mem, coll)
+        out["roofline_frac"] = (mf / chips / PEAK_FLOPS) / bound
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="runs/dryrun")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    recs = [r for r in load(args.dir) if r["mesh"] == "16x16"]
+    if args.md:
+        print("| arch | shape | compute s | memory s (floor/hlo) | "
+              "collective s | dominant | useful frac | roofline frac |")
+        print("|---|---|---|---|---|---|---|---|")
+    for rec in recs:
+        t = terms(rec)
+        key = f"{rec['arch']}×{rec['shape']}"
+        if t is None:
+            status = rec.get("status")
+            reason = rec.get("reason", rec.get("error", ""))[:60]
+            if args.md:
+                print(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                      f"{status}: {reason} | — | — |")
+            else:
+                print(f"{key}: {status} {reason}")
+            continue
+        if args.md:
+            mf = t["memory_s_floor"]
+            print(f"| {rec['arch']} | {rec['shape']} "
+                  f"| {t['compute_s'] * 1e3:.1f}m "
+                  f"| {mf * 1e3:.1f}m / {t['memory_s_hlo'] * 1e3:.1f}m "
+                  f"| {t['collective_s'] * 1e3:.1f}m "
+                  f"| {t['dominant']} "
+                  f"| {t.get('useful_frac', 0):.2f} "
+                  f"| {t.get('roofline_frac', 0):.2f} |")
+        else:
+            print(f"{key}: {t}")
+
+
+if __name__ == "__main__":
+    main()

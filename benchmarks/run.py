@@ -1,0 +1,41 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: ``python -m benchmarks.run [--only substr]``.
+
+Paper figures (2-9) + beyond-paper benches.  Environment knobs:
+REPRO_BENCH_SCALE (problem sizes), REPRO_BENCH_PLACES (worker threads).
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="substring filter")
+    ap.add_argument("--skip-paper", action="store_true")
+    ap.add_argument("--skip-beyond", action="store_true")
+    args = ap.parse_args()
+
+    from . import beyond_paper, paper_figures
+    benches = []
+    if not args.skip_paper:
+        benches += paper_figures.ALL
+    if not args.skip_beyond:
+        benches += beyond_paper.ALL
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in benches:
+        if args.only and args.only not in fn.__name__:
+            continue
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"{fn.__name__},NaN,ERROR", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == '__main__':
+    main()

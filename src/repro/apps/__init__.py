@@ -1,0 +1,3 @@
+"""The paper's application kernels (Section 4), each with its specialized
+strategy and a strategy-oblivious baseline path."""
+from . import bipartition, prefix_sum, quicksort, sssp, tristrip, uts  # noqa: F401

@@ -1,0 +1,20 @@
+"""Device-level (XLA-compiled) adaptations of the paper's strategy
+decisions.  A TPU step cannot run dynamic per-core task queues, so the same
+decision procedures — weighted steal-half-work balancing, priority-ordered
+dispatch with dead-task dropping, second-choice restealing — are compiled
+into deterministic `jax.lax` programs that run inside the step."""
+from .moe_balance import (combine_expert_outputs, gather_expert_inputs,
+                          priority_dispatch, route_topk)
+from .request_scheduler import (BatchPlan, ContinuousBatcher, Request,
+                                RequestState, RequestStrategy,
+                                rebalance_replicas)
+from .weighted_partition import (greedy_weighted_partition, partition_cost,
+                                 steal_half_transfers)
+
+__all__ = [
+    "route_topk", "priority_dispatch", "gather_expert_inputs",
+    "combine_expert_outputs",
+    "greedy_weighted_partition", "steal_half_transfers", "partition_cost",
+    "ContinuousBatcher", "Request", "RequestStrategy", "RequestState",
+    "BatchPlan", "rebalance_replicas",
+]

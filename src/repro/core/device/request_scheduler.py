@@ -1,0 +1,268 @@
+"""Continuous-batching request scheduler with per-request strategies.
+
+Serving requests ARE tasks: the paper's strategy fields map onto
+
+* priority          — SLO class + deadline: admission order into the batch,
+* transitive weight — prompt length + estimated decode length: work estimate
+                      used for cross-replica steal-half-work rebalancing,
+* dead tasks        — cancelled / expired requests are evicted from queues
+                      and from the running batch before the next step,
+* spawn-to-call     — short prefills are merged ("chunked prefill") into a
+                      single fused step instead of each paying a scheduling
+                      round-trip.
+
+Host-level and model-agnostic: :meth:`ContinuousBatcher.plan_step` only
+produces the batch composition; the serving engine executes it.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..strategy import PriorityStrategy
+
+__all__ = ["Request", "RequestState", "RequestStrategy", "ContinuousBatcher",
+           "BatchPlan", "rebalance_replicas"]
+
+_rid = itertools.count()
+
+
+class RequestState(Enum):
+    WAITING = 0
+    PREFILL = 1
+    RUNNING = 2
+    DONE = 3
+    CANCELLED = 4
+
+
+@dataclass
+class Request:
+    prompt_len: int
+    max_new_tokens: int
+    priority: float = 1.0           # lower = more urgent (SLO class)
+    deadline: Optional[float] = None
+    arrival: float = field(default_factory=time.monotonic)
+    rid: int = field(default_factory=lambda: next(_rid))
+    state: RequestState = RequestState.WAITING
+    generated: int = 0
+    prefilled: int = 0
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+    @property
+    def est_remaining_work(self) -> int:
+        """Transitive weight: tokens still to process."""
+        return max(self.prompt_len - self.prefilled, 0) + \
+            max(self.max_new_tokens - self.generated, 0)
+
+    def cancel(self) -> None:
+        if self.state not in (RequestState.DONE,):
+            self.state = RequestState.CANCELLED
+
+
+class RequestStrategy(PriorityStrategy):
+    """Dead when cancelled or past its deadline."""
+
+    __slots__ = ("request", "_now")
+
+    def __init__(self, request: Request, now: Callable[[], float]):
+        key = (request.priority, request.deadline or np.inf, request.arrival)
+        super().__init__(priority=key,
+                         transitive_weight=request.est_remaining_work)
+        self.request = request
+        self._now = now
+
+    # tuple priorities compare lexicographically
+    def is_dead(self) -> bool:
+        r = self.request
+        if r.state == RequestState.CANCELLED:
+            return True
+        if r.deadline is not None and r.state == RequestState.WAITING \
+                and self._now() > r.deadline:
+            return True
+        return False
+
+
+@dataclass
+class BatchPlan:
+    """What the engine should run this step."""
+    decode: List[Request] = field(default_factory=list)
+    prefill: List[Request] = field(default_factory=list)   # merged chunk
+    prefill_tokens: int = 0
+    evicted: List[Request] = field(default_factory=list)
+    admitted: List[Request] = field(default_factory=list)
+
+
+class _HeapItem:
+    __slots__ = ("strategy",)
+
+    def __init__(self, strategy: RequestStrategy):
+        self.strategy = strategy
+
+    def __lt__(self, other: "_HeapItem") -> bool:
+        return self.strategy.prioritize(other.strategy)
+
+
+class ContinuousBatcher:
+    """One replica's scheduler.  ``max_batch`` bounds concurrent decode
+    slots; ``prefill_token_budget`` is the merged-prefill chunk size."""
+
+    def __init__(self, max_batch: int = 32, prefill_token_budget: int = 2048,
+                 now: Callable[[], float] = time.monotonic):
+        self.max_batch = max_batch
+        self.prefill_token_budget = prefill_token_budget
+        self.now = now
+        self._waiting: List[_HeapItem] = []
+        self.running: Dict[int, Request] = {}
+        self.metrics = {"admitted": 0, "evicted_dead": 0,
+                        "merged_prefills": 0, "steps": 0,
+                        "deadline_misses": 0}
+
+    # -- queue ops ----------------------------------------------------------
+    def submit(self, request: Request) -> None:
+        heapq.heappush(self._waiting,
+                       _HeapItem(RequestStrategy(request, self.now)))
+
+    def submit_many(self, requests: Sequence[Request]) -> None:
+        for r in requests:
+            self.submit(r)
+
+    @property
+    def waiting_count(self) -> int:
+        return sum(1 for it in self._waiting
+                   if it.strategy.request.state == RequestState.WAITING)
+
+    def backlog_weight(self) -> int:
+        """Estimated outstanding work (for cross-replica stealing)."""
+        w = sum(it.strategy.request.est_remaining_work
+                for it in self._waiting
+                if it.strategy.request.state == RequestState.WAITING)
+        w += sum(r.est_remaining_work for r in self.running.values())
+        return w
+
+    def steal_waiting(self, target_weight: int) -> List[Request]:
+        """Remove waiting requests worth ~``target_weight`` (largest-weight
+        first — steal work, not count) for migration to another replica."""
+        items = [it for it in self._waiting
+                 if it.strategy.request.state == RequestState.WAITING]
+        items.sort(key=lambda it: -it.strategy.request.est_remaining_work)
+        stolen, got = [], 0
+        for it in items:
+            if got >= target_weight:
+                break
+            stolen.append(it.strategy.request)
+            it.strategy.request.state = RequestState.CANCELLED  # tombstone
+            got += it.strategy.request.est_remaining_work
+        out = []
+        for r in stolen:  # revive on the new replica
+            r.state = RequestState.WAITING
+            out.append(r)
+        self._prune()
+        return out
+
+    def _prune(self) -> None:
+        live = [it for it in self._waiting
+                if it.strategy.request.state == RequestState.WAITING
+                and not it.strategy.is_dead()]
+        dead = len(self._waiting) - len(live)
+        if dead:
+            self.metrics["evicted_dead"] += dead
+            self._waiting = live
+            heapq.heapify(self._waiting)
+
+    # -- planning -----------------------------------------------------------
+    def plan_step(self) -> BatchPlan:
+        plan = BatchPlan()
+        self.metrics["steps"] += 1
+        # 1. evict dead/finished from the running batch
+        for rid in list(self.running):
+            r = self.running[rid]
+            if r.state in (RequestState.DONE, RequestState.CANCELLED) or \
+                    r.generated >= r.max_new_tokens:
+                if r.state != RequestState.CANCELLED:
+                    r.state = RequestState.DONE
+                    r.finished_at = self.now()
+                plan.evicted.append(self.running.pop(rid))
+        # 2. admit waiting requests by strategy priority (dead pruned inline)
+        while len(self.running) + len(plan.prefill) < self.max_batch:
+            req = self._pop_waiting()
+            if req is None:
+                break
+            if req.prompt_len - req.prefilled > 0:
+                if plan.prefill_tokens + (req.prompt_len - req.prefilled) \
+                        > self.prefill_token_budget and plan.prefill:
+                    # chunk full; leave for next step
+                    self.submit(req)
+                    break
+                req.state = RequestState.PREFILL
+                plan.prefill.append(req)
+                plan.prefill_tokens += req.prompt_len - req.prefilled
+            else:
+                req.state = RequestState.RUNNING
+                self.running[req.rid] = req
+                plan.admitted.append(req)
+        if len(plan.prefill) > 1:
+            self.metrics["merged_prefills"] += len(plan.prefill) - 1
+        # 3. everyone running decodes one token this step
+        plan.decode = list(self.running.values())
+        self.metrics["admitted"] += len(plan.prefill) + len(plan.admitted)
+        return plan
+
+    def _pop_waiting(self) -> Optional[Request]:
+        while self._waiting:
+            item = heapq.heappop(self._waiting)
+            strat = item.strategy
+            if strat.is_dead():
+                self.metrics["evicted_dead"] += 1
+                if strat.request.deadline is not None and \
+                        self.now() > strat.request.deadline:
+                    self.metrics["deadline_misses"] += 1
+                continue
+            if strat.request.state != RequestState.WAITING:
+                continue
+            return strat.request
+        return None
+
+    # -- engine callbacks ----------------------------------------------------
+    def complete_prefill(self, requests: Sequence[Request]) -> None:
+        for r in requests:
+            r.prefilled = r.prompt_len
+            r.state = RequestState.RUNNING
+            if r.first_token_at is None:
+                r.first_token_at = self.now()
+            self.running[r.rid] = r
+
+    def complete_decode(self, requests: Sequence[Request]) -> None:
+        for r in requests:
+            r.generated += 1
+
+
+def rebalance_replicas(batchers: Sequence[ContinuousBatcher]) -> int:
+    """Cross-replica steal-half-work: idle replicas steal half the surplus
+    backlog (by estimated work) from the most loaded one.  Returns number of
+    migrated requests."""
+    loads = np.array([b.backlog_weight() for b in batchers], np.float64)
+    if loads.sum() == 0:
+        return 0
+    mean = loads.mean()
+    moved = 0
+    for _ in range(len(batchers)):
+        rich, poor = int(np.argmax(loads)), int(np.argmin(loads))
+        surplus = loads[rich] - mean
+        if surplus <= mean * 0.1 or rich == poor:
+            break
+        stolen = batchers[rich].steal_waiting(int(surplus / 2))
+        if not stolen:
+            break
+        batchers[poor].submit_many(stolen)
+        w = sum(r.est_remaining_work for r in stolen)
+        loads[rich] -= w
+        loads[poor] += w
+        moved += len(stolen)
+    return moved

@@ -1,0 +1,94 @@
+"""Steal-half-the-WORK, compiled.
+
+The paper: a thief should transfer half the victim's *work* (sum of
+transitive weights), not half its task count.  Inside an XLA program the same
+decision becomes a deterministic balancing pass over weighted items:
+
+* :func:`greedy_weighted_partition` — LPT greedy: place the heaviest
+  remaining item on the least-loaded bin (`lax.fori_loop`, jit-safe).  Used
+  to pack variable-length sequences onto data-parallel shards and to assign
+  data-pipeline shards to hosts.
+* :func:`steal_half_transfers` — iterative pairwise balancing: while the
+  spread is large, the richest bin sends half its surplus over the mean to
+  the poorest bin (exactly the paper's steal-half rule applied until
+  convergence).  Returns the transfer matrix, e.g. to re-issue input shards
+  away from stragglers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["greedy_weighted_partition", "steal_half_transfers",
+           "partition_cost"]
+
+
+@functools.partial(jax.jit, static_argnames=("num_bins",))
+def greedy_weighted_partition(weights: jax.Array, num_bins: int) -> jax.Array:
+    """Assign each item to a bin, heaviest-first onto the least-loaded bin.
+
+    Args:
+      weights: [N] nonnegative work estimates (transitive weights).
+      num_bins: number of places/shards.
+    Returns:
+      [N] int32 bin ids.
+    """
+    n = weights.shape[0]
+    order = jnp.argsort(-weights)
+
+    def body(i, state):
+        loads, assign = state
+        item = order[i]
+        b = jnp.argmin(loads)
+        loads = loads.at[b].add(weights[item])
+        assign = assign.at[item].set(b.astype(jnp.int32))
+        return loads, assign
+
+    loads0 = jnp.zeros(num_bins, weights.dtype)
+    assign0 = jnp.zeros(n, jnp.int32)
+    _, assign = jax.lax.fori_loop(0, n, body, (loads0, assign0))
+    return assign
+
+
+@functools.partial(jax.jit, static_argnames=("max_rounds",))
+def steal_half_transfers(loads: jax.Array, max_rounds: int = 16,
+                         rel_tol: float = 0.05):
+    """Pairwise steal-half-work until balanced.
+
+    Each round the poorest bin steals ``(richest - mean) / 2`` from the
+    richest bin (the paper's rule: a steal moves half the victim's surplus
+    work).  Stops when ``max/mean - 1 <= rel_tol`` or after ``max_rounds``.
+
+    Returns (transfers [P, P], final_loads [P]) where ``transfers[i, j]`` is
+    the amount of work moved i → j.
+    """
+    p = loads.shape[0]
+    mean = jnp.mean(loads)
+
+    def cond(state):
+        cur, _, r = state
+        return jnp.logical_and(r < max_rounds,
+                               jnp.max(cur) > mean * (1.0 + rel_tol))
+
+    def body(state):
+        cur, transfers, r = state
+        rich = jnp.argmax(cur)
+        poor = jnp.argmin(cur)
+        amount = jnp.maximum((cur[rich] - mean) * 0.5, 0.0)
+        cur = cur.at[rich].add(-amount).at[poor].add(amount)
+        transfers = transfers.at[rich, poor].add(amount)
+        return cur, transfers, r + 1
+
+    cur, transfers, _ = jax.lax.while_loop(
+        cond, body, (loads.astype(jnp.float32),
+                     jnp.zeros((p, p), jnp.float32), 0))
+    return transfers, cur
+
+
+def partition_cost(weights: jax.Array, assign: jax.Array,
+                   num_bins: int) -> jax.Array:
+    """Makespan (max bin load) of an assignment — lower is better."""
+    loads = jnp.zeros(num_bins, weights.dtype).at[assign].add(weights)
+    return jnp.max(loads)

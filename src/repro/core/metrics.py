@@ -1,0 +1,41 @@
+"""Scheduler counters — the work metrics the paper's evaluation relies on
+(steal counts, queue churn, call-conversion counts, dead-task pruning)."""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field, fields
+
+
+@dataclass
+class SchedulerMetrics:
+    spawns: int = 0                 # tasks put into task storage
+    calls_converted: int = 0        # spawns executed inline (spawn-to-call)
+    tasks_executed: int = 0
+    steals: int = 0                 # successful steal transactions
+    tasks_stolen: int = 0
+    weight_stolen: int = 0
+    steal_attempts: int = 0         # including failed ones
+    dead_pruned: int = 0
+    max_queue_len: int = 0
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+
+    def add(self, **kw) -> None:
+        with self._lock:
+            for k, v in kw.items():
+                setattr(self, k, getattr(self, k) + v)
+
+    def observe_queue_len(self, n: int) -> None:
+        if n > self.max_queue_len:
+            with self._lock:
+                if n > self.max_queue_len:
+                    self.max_queue_len = n
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {f.name: getattr(self, f.name) for f in fields(self)
+                    if not f.name.startswith("_")}
+
+    @property
+    def queue_churn(self) -> int:
+        """Pushes+pops through task storage — what spawn-to-call removes."""
+        return 2 * self.spawns

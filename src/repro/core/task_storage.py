@@ -1,0 +1,270 @@
+"""Per-place task storage (the paper's Section 3.1).
+
+Two implementations:
+
+* :class:`StrategyTaskStorage` — a priority storage supporting a different
+  order per accessing place: the **owner's** priority order is maintained
+  eagerly (updated on every push), while each **stealer's** order is evaluated
+  lazily — a cached heap per stealer, extended with newly pushed tasks at the
+  next steal attempt (exactly the design sketched in the paper; our
+  implementation is fine-grained-locked rather than lock-free — the lock-free
+  variant was out of the paper's scope as well).
+
+  Composability: tasks are grouped per concrete strategy type; each group is
+  a heap in that type's order; the storage-wide head is picked by comparing
+  group heads under the lowest-common-ancestor strategy (children overrule
+  ancestors).
+
+* :class:`DequeTaskStorage` — baseline Arora-style work-stealing deque:
+  owner LIFO, stealer FIFO, oblivious to strategies.
+
+A task resides in exactly one storage; its ``state`` changes only under that
+storage's lock, so steal-view entries that went stale (task executed, stolen
+or re-homed) are skipped at pop time by checking residency + state.
+"""
+from __future__ import annotations
+
+import heapq
+import threading
+from collections import deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .strategy import BaseStrategy, local_before, steal_before, lowest_common_ancestor
+from .task import Task, TaskState
+
+PruneCallback = Callable[[Task], None]
+
+
+class _OwnerItem:
+    __slots__ = ("task",)
+
+    def __init__(self, task: Task):
+        self.task = task
+
+    def __lt__(self, other: "_OwnerItem") -> bool:
+        return local_before(self.task.strategy, other.task.strategy)
+
+
+class _StealItem:
+    __slots__ = ("task",)
+
+    def __init__(self, task: Task):
+        self.task = task
+
+    def __lt__(self, other: "_StealItem") -> bool:
+        return steal_before(self.task.strategy, other.task.strategy)
+
+
+class _StealView:
+    """Lazily evaluated steal-priority view cached per stealer place."""
+
+    __slots__ = ("watermark", "heap")
+
+    def __init__(self):
+        self.watermark = 0
+        self.heap: List[_StealItem] = []
+
+
+class StrategyTaskStorage:
+    def __init__(self, place_id: int, on_prune: Optional[PruneCallback] = None):
+        self.place_id = place_id
+        self._lock = threading.Lock()
+        self._groups: Dict[type, List[_OwnerItem]] = {}
+        self._log: List[Task] = []          # append-only push log for stealers
+        self._views: Dict[int, _StealView] = {}
+        self._ready = 0
+        self._ready_weight = 0
+        self._on_prune = on_prune
+
+    # -- helpers (hold lock) ------------------------------------------------
+    def _resident(self, task: Task) -> bool:
+        return task.state == TaskState.READY and getattr(task, "_storage", None) is self
+
+    def _claim(self, task: Task) -> None:
+        task.state = TaskState.CLAIMED
+        self._ready -= 1
+        self._ready_weight -= task.strategy.transitive_weight
+
+    def _prune(self, task: Task) -> None:
+        task.state = TaskState.DEAD
+        self._ready -= 1
+        self._ready_weight -= task.strategy.transitive_weight
+        if self._on_prune is not None:
+            self._on_prune(task)
+
+    def _valid_head(self, heap, steal: bool) -> Optional[Task]:
+        """Pop stale/dead entries until the head is a live resident task (or
+        the heap empties).  Dead tasks are pruned on sight — the paper's
+        'removed early and will not be stolen'."""
+        while heap:
+            task = heap[0].task
+            if not self._resident(task):
+                heapq.heappop(heap)
+                continue
+            if task.strategy.is_dead():
+                heapq.heappop(heap)
+                self._prune(task)
+                continue
+            return task
+        return None
+
+    # -- owner API -----------------------------------------------------------
+    def push(self, task: Task) -> None:
+        with self._lock:
+            task._storage = self
+            task.state = TaskState.READY
+            group = self._groups.get(type(task.strategy))
+            if group is None:
+                group = self._groups[type(task.strategy)] = []
+            heapq.heappush(group, _OwnerItem(task))
+            self._log.append(task)
+            self._ready += 1
+            self._ready_weight += task.strategy.transitive_weight
+
+    def pop_local(self) -> Optional[Task]:
+        with self._lock:
+            best_task: Optional[Task] = None
+            best_group = None
+            for group in self._groups.values():
+                head = self._valid_head(group, steal=False)
+                if head is None:
+                    continue
+                if best_task is None or local_before(head.strategy,
+                                                     best_task.strategy):
+                    best_task, best_group = head, group
+            if best_task is None:
+                return None
+            heapq.heappop(best_group)
+            self._claim(best_task)
+            return best_task
+
+    # -- stealer API ----------------------------------------------------------
+    def steal_batch(self, stealer_id: int, *, half_work: bool = True,
+                    max_tasks: Optional[int] = None) -> Tuple[List[Task], int]:
+        """Steal in the stealer's (lazily cached) steal-priority order until
+        half the *weighted* work has moved (``half_work=True``) or half the
+        task count (``half_work=False``).  Returns (tasks, weight)."""
+        with self._lock:
+            if self._ready == 0:
+                return [], 0
+            view = self._views.get(stealer_id)
+            if view is None:
+                view = self._views[stealer_id] = _StealView()
+            # Lazy refresh: only now are newly pushed tasks ordered for this
+            # stealer.
+            log = self._log
+            for i in range(view.watermark, len(log)):
+                task = log[i]
+                if self._resident(task):
+                    heapq.heappush(view.heap, _StealItem(task))
+            view.watermark = len(log)
+
+            target_weight = self._ready_weight // 2
+            target_count = max(1, self._ready // 2)
+            if max_tasks is not None:
+                target_count = min(target_count, max_tasks)
+
+            stolen: List[Task] = []
+            weight = 0
+            while view.heap:
+                task = self._valid_head(view.heap, steal=True)
+                if task is None:
+                    break
+                heapq.heappop(view.heap)
+                self._claim(task)
+                stolen.append(task)
+                weight += task.strategy.transitive_weight
+                # Terminate as soon as half the work (by weight) has been
+                # transferred — possibly after a single heavy task — or, in
+                # count mode, after half the tasks.
+                if half_work:
+                    if weight >= target_weight:
+                        break
+                else:
+                    if len(stolen) >= target_count:
+                        break
+            # Compact the log when mostly stale to bound memory.
+            if len(log) > 256 and self._ready < len(log) // 4:
+                self._compact()
+            return stolen, weight
+
+    def _compact(self) -> None:
+        live = [t for t in self._log if self._resident(t)]
+        self._log = live
+        for view in self._views.values():
+            view.watermark = len(live)
+            view.heap = [_StealItem(t) for t in live]
+            heapq.heapify(view.heap)
+
+    # -- introspection ---------------------------------------------------------
+    @property
+    def ready_count(self) -> int:
+        return self._ready
+
+    @property
+    def ready_weight(self) -> int:
+        return self._ready_weight
+
+    def __len__(self) -> int:
+        return self._ready
+
+
+class DequeTaskStorage:
+    """Baseline Arora-style deque: owner pops LIFO, thieves take FIFO.
+    Strategy-oblivious (priority, weight and deadness are ignored, matching a
+    standard work-stealing scheduler)."""
+
+    def __init__(self, place_id: int, on_prune: Optional[PruneCallback] = None,
+                 steal_half_count: bool = False):
+        self.place_id = place_id
+        self._lock = threading.Lock()
+        self._dq: deque = deque()
+        self._steal_half_count = steal_half_count
+
+    def push(self, task: Task) -> None:
+        with self._lock:
+            task._storage = self
+            task.state = TaskState.READY
+            self._dq.append(task)
+
+    def pop_local(self) -> Optional[Task]:
+        with self._lock:
+            while self._dq:
+                task = self._dq.pop()
+                if task.state == TaskState.READY:
+                    task.state = TaskState.CLAIMED
+                    return task
+            return None
+
+    def steal_batch(self, stealer_id: int, *, half_work: bool = False,
+                    max_tasks: Optional[int] = None) -> Tuple[List[Task], int]:
+        del half_work  # oblivious baseline: steals 1 task (or half the count)
+        with self._lock:
+            n = len(self._dq)
+            if n == 0:
+                return [], 0
+            take = max(1, n // 2) if self._steal_half_count else 1
+            if max_tasks is not None:
+                take = min(take, max_tasks)
+            stolen: List[Task] = []
+            weight = 0
+            while self._dq and len(stolen) < take:
+                task = self._dq.popleft()
+                if task.state != TaskState.READY:
+                    continue
+                task.state = TaskState.CLAIMED
+                stolen.append(task)
+                weight += task.strategy.transitive_weight
+            return stolen, weight
+
+    @property
+    def ready_count(self) -> int:
+        return len(self._dq)
+
+    @property
+    def ready_weight(self) -> int:
+        return sum(t.strategy.transitive_weight for t in self._dq
+                   if t.state == TaskState.READY)
+
+    def __len__(self) -> int:
+        return len(self._dq)

@@ -1,0 +1,5 @@
+from .pipeline import DataPipeline, SyntheticCorpus
+from .packing import pack_documents, packing_efficiency
+
+__all__ = ["DataPipeline", "SyntheticCorpus", "pack_documents",
+           "packing_efficiency"]

@@ -1,0 +1,126 @@
+"""Blocked online-softmax attention (flash attention) for TPU.
+
+Grid (B, H, S/bq, T/bk): the kv-block dimension is innermost and sequential,
+so the running max/denominator/accumulator live in VMEM scratch across kv
+steps — the same carry-across-sequential-grid pattern as the prefix-scan
+kernel.  GQA is handled in the K/V BlockSpec index maps (query head h reads
+kv head h // group), causal + sliding-window masking by block-index
+predicates, and fully-masked kv blocks are skipped with ``pl.when`` — for
+SWA this turns the O(S·T) sweep into O(S·window) compute.
+
+Forward only: the training path uses XLA attention (or this kernel under
+``jax.checkpoint`` recomputation); serving uses it directly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["mha_pallas"]
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale, causal, window, bq, bk, kv_len):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Block-level reachability (static in program ids → cheap skip).
+    q_lo = qi * bq
+    q_hi = q_lo + bq - 1
+    k_lo = ki * bk
+    k_hi = k_lo + bk - 1
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_lo <= q_hi
+    if window is not None:
+        live &= q_lo - k_hi < window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)            # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        rows = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = cols < kv_len
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= rows - cols < window
+        s = jnp.where(mask, s, _NEG)
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[:, 0] = l_prev * alpha + p.sum(axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot(p, v,
+                                      preferred_element_type=jnp.float32))
+        m_ref[:, 0] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "bq", "bk", "interpret",
+                                             "kv_len"))
+def mha_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+               causal: bool = True, window: Optional[int] = None,
+               scale: Optional[float] = None, bq: int = 128, bk: int = 128,
+               interpret: bool = True,
+               kv_len: Optional[int] = None) -> jax.Array:
+    """q: [B, H, S, d]; k, v: [B, Hkv, T, d] with H % Hkv == 0.
+    S % bq == 0 and T % bk == 0 (ops wrapper pads; ``kv_len`` = true,
+    unpadded T so padded columns are masked out).  Returns [B, H, S, d]."""
+    b, h, s, d = q.shape
+    _, hkv, t, _ = k.shape
+    assert h % hkv == 0 and s % bq == 0 and t % bk == 0
+    group = h // hkv
+    if scale is None:
+        scale = d ** -0.5
+    grid = (b, h, s // bq, t // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          window=window, bq=bq, bk=bk,
+                          kv_len=kv_len or t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, qi, ki: (b_, h_ // group, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, qi, ki: (b_, h_ // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,40 @@
+"""Public wrapper: model layout [B, S, H, d] in/out, padding, GQA."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import mha_pallas
+
+__all__ = ["flash_attention"]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "interpret", "bq", "bk"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None, bq: int = 128,
+                    bk: int = 128, interpret: bool = True) -> jax.Array:
+    """q: [B, S, H, d]; k, v: [B, T, Hkv, d] → [B, S, H, d]."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    bq = min(bq, max(8, 1 << (s - 1).bit_length()))
+    bk = min(bk, max(8, 1 << (t - 1).bit_length()))
+    pad_q = (-s) % bq
+    pad_k = (-t) % bk
+    qt = jnp.moveaxis(q, 2, 1)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    # kv_len masking inside the kernel ignores padded columns
+    out = mha_pallas(qt, kt, vt, causal=causal, window=window, scale=scale,
+                     bq=bq, bk=bk, interpret=interpret, kv_len=t)
+    out = out[:, :, :s]
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_ref(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+            scale: Optional[float] = None):
+    """q: [B,H,S,d]; k, v: [B,Hkv,T,d].  Returns [B,H,S,d]."""
+    b, h, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    if scale is None:
+        scale = d ** -0.5
+    k = jnp.repeat(k, h // hkv, axis=1)
+    v = jnp.repeat(v, h // hkv, axis=1)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= j <= i
+    if window is not None:
+        mask &= i - j < window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

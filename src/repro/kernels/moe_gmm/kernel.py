@@ -1,0 +1,73 @@
+"""Grouped (per-expert) SwiGLU matmul over strategy-dispatched buffers.
+
+Input is the dispatch buffer [E, C, D] produced by the priority scheduler in
+``core/device/moe_balance.py``; each expert's slab multiplies its own
+weights — a ragged/grouped matmul realized as a dense grid over (expert,
+capacity-tile, ffn-tile).  The f-tile dimension is innermost/sequential, so
+the per-tile partial products accumulate into a VMEM scratch of the output
+slab (carry-across-grid again), and only one [bc, D] fp32 accumulator lives
+in VMEM regardless of d_ff.
+
+VMEM budget at (bc=64, bf=128, D=7168): x-slab 0.9 MB + 3 weight tiles
+~5.5 MB + fp32 acc 1.8 MB ≈ 8 MB < 16 MB v5e VMEM; all matmul dims are
+multiples of (8, 128) MXU tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["grouped_swiglu_pallas"]
+
+
+def _kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref):
+    fi = pl.program_id(2)
+    nf = pl.num_programs(2)
+
+    @pl.when(fi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                                   # [bc, D]
+    g = jax.lax.dot(x, wg_ref[0],
+                    preferred_element_type=jnp.float32)      # [bc, bf]
+    u = jax.lax.dot(x, wu_ref[0],
+                    preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    acc_ref[...] += jax.lax.dot(h, wd_ref[0],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(fi == nf - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "bf", "interpret"))
+def grouped_swiglu_pallas(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                          w_down: jax.Array, *, bc: int = 64, bf: int = 128,
+                          interpret: bool = True) -> jax.Array:
+    """x: [E, C, D]; w_gate/w_up: [E, D, F]; w_down: [E, F, D] → [E, C, D]."""
+    e, c, d = x.shape
+    f = w_gate.shape[-1]
+    assert c % bc == 0 and f % bf == 0, (c, bc, f, bf)
+    grid = (e, c // bc, f // bf)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, d), lambda e_, ci, fi: (e_, ci, 0)),
+            pl.BlockSpec((1, d, bf), lambda e_, ci, fi: (e_, 0, fi)),
+            pl.BlockSpec((1, d, bf), lambda e_, ci, fi: (e_, 0, fi)),
+            pl.BlockSpec((1, bf, d), lambda e_, ci, fi: (e_, fi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, d), lambda e_, ci, fi: (e_, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, d), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w_gate, w_up, w_down)

@@ -1,0 +1,33 @@
+"""Public wrapper: padding to tile multiples + fallback for tiny shapes."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import grouped_swiglu_pallas
+from .ref import grouped_swiglu_ref
+
+__all__ = ["grouped_swiglu"]
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "bf", "interpret"))
+def grouped_swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                   w_down: jax.Array, *, bc: int = 64, bf: int = 128,
+                   interpret: bool = True) -> jax.Array:
+    e, c, d = x.shape
+    f = w_gate.shape[-1]
+    bc = min(bc, c) if c >= 8 else c
+    bf = min(bf, f) if f >= 8 else f
+    pad_c = (-c) % bc
+    pad_f = (-f) % bf
+    if pad_c:
+        x = jnp.pad(x, ((0, 0), (0, pad_c), (0, 0)))
+    if pad_f:
+        w_gate = jnp.pad(w_gate, ((0, 0), (0, 0), (0, pad_f)))
+        w_up = jnp.pad(w_up, ((0, 0), (0, 0), (0, pad_f)))
+        w_down = jnp.pad(w_down, ((0, 0), (0, pad_f), (0, 0)))
+    y = grouped_swiglu_pallas(x, w_gate, w_up, w_down, bc=bc, bf=bf,
+                              interpret=interpret)
+    return y[:, :c]

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the grouped SwiGLU kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def grouped_swiglu_ref(x, w_gate, w_up, w_down):
+    """x: [E, C, D]; w_gate/w_up: [E, D, F]; w_down: [E, F, D]."""
+    g = jnp.einsum("ecd,edf->ecf", x, w_gate,
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", x, w_up,
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    y = jnp.einsum("ecf,efd->ecd", h, w_down,
+                   preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,66 @@
+"""One-pass blocked prefix scan — the paper's prefix-sum strategy made
+structural on TPU.
+
+The paper's insight: if blocks are processed in order by one place, the
+previous block's total can be folded in during the single pass, eliminating
+the scan-of-block-sums and fix-up passes.  On a TPU core the Pallas grid's
+innermost dimension executes **sequentially**, so "some place processes
+blocks in order" is guaranteed by construction: a carry cell in VMEM scratch
+survives across grid steps and plays the role of the paper's global counter
++ running total.  One pass, no extra kernel launches, 2× less HBM traffic
+than the 3-pass parallel algorithm.
+
+Grid: (rows, N // block).  The row dimension may be split across TPU cores
+(parallel); the block dimension is sequential per row, and the carry is
+reset at block 0 of each row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["prefix_scan_pallas"]
+
+
+def _kernel(x_ref, o_ref, carry_ref, *, acc_dtype):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _reset():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    seg = jnp.cumsum(x_ref[...].astype(acc_dtype), axis=-1)
+    o_ref[...] = (seg + carry_ref[0, 0]).astype(o_ref.dtype)
+    carry_ref[0, 0] = carry_ref[0, 0] + seg[0, -1]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "interpret", "acc_dtype"))
+def prefix_scan_pallas(x: jax.Array, *, block: int = 256,
+                       interpret: bool = True,
+                       acc_dtype=None) -> jax.Array:
+    """Inclusive prefix sum along the last axis of a 2-D array.
+
+    x: [R, N] with N % block == 0 (the ops wrapper pads).
+    """
+    r, n = x.shape
+    assert n % block == 0, (n, block)
+    if acc_dtype is None:
+        acc_dtype = (jnp.float32 if jnp.issubdtype(x.dtype, jnp.floating)
+                     else jnp.int32)
+    grid = (r, n // block)
+    return pl.pallas_call(
+        functools.partial(_kernel, acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, block), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((1, 1), acc_dtype)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,26 @@
+"""Jitted public wrapper: shape normalization + padding for the kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import prefix_scan_pallas
+
+__all__ = ["prefix_scan"]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def prefix_scan(x: jax.Array, *, block: int = 256,
+                interpret: bool = True) -> jax.Array:
+    """Inclusive prefix sum along the last axis; any rank ≥ 1; pads the
+    last axis to a block multiple internally."""
+    shape = x.shape
+    n = shape[-1]
+    x2 = x.reshape(-1, n)
+    pad = (-n) % block
+    if pad:
+        x2 = jnp.pad(x2, ((0, 0), (0, pad)))
+    y = prefix_scan_pallas(x2, block=block, interpret=interpret)
+    return y[:, :n].reshape(shape)

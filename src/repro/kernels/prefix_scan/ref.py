@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the prefix-scan kernel."""
+import jax.numpy as jnp
+
+
+def prefix_scan_ref(x, acc_dtype=None):
+    if acc_dtype is None:
+        acc_dtype = (jnp.float32 if jnp.issubdtype(x.dtype, jnp.floating)
+                     else jnp.int32)
+    return jnp.cumsum(x.astype(acc_dtype), axis=-1).astype(x.dtype)

@@ -1,0 +1,87 @@
+"""RWKV-6 WKV recurrence kernel (data-dependent decay linear attention).
+
+Grid (B, H, T/c) with the time-chunk dimension innermost and sequential; the
+[N, N] per-head state lives in VMEM scratch and is carried across chunks —
+the HBM traffic is O(T·N) for the ios instead of O(T·N²) for materialized
+states, and the sequential chunk walk is the same carry pattern as the
+prefix-scan kernel (the paper's one-pass strategy).  Within a chunk the
+recurrence is stepped with a ``fori_loop`` over VPU outer-products (the MXU
+has no use here: the state update is rank-1).
+
+Forward only (serving/prefill path; training uses the chunked associative
+scan in ``models/ssm.py``, which this kernel is verified against).
+Emits y and the final state (for prefill → decode hand-off).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["wkv6_pallas"]
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_out_ref, s_ref, *,
+            chunk):
+    ti = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    u = u_ref[0].astype(jnp.float32)                  # [N]
+    r = r_ref[0, :, 0].astype(jnp.float32)            # [c, N]
+    k = k_ref[0, :, 0].astype(jnp.float32)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    w = w_ref[0, :, 0].astype(jnp.float32)
+
+    def step(i, carry):
+        s, ys = carry
+        ri, ki, vi, wi = r[i], k[i], v[i], w[i]
+        kv = ki[:, None] * vi[None, :]                # [N, N]
+        y = ri @ s + (ri * u * ki).sum() * vi         # [N]
+        ys = jax.lax.dynamic_update_slice_in_dim(ys, y[None], i, axis=0)
+        s = wi[:, None] * s + kv
+        return s, ys
+
+    s0 = s_ref[...]
+    ys0 = jnp.zeros((chunk, r.shape[-1]), jnp.float32)
+    s_end, ys = jax.lax.fori_loop(0, chunk, step, (s0, ys0))
+    s_ref[...] = s_end
+    y_ref[0, :, 0] = ys.astype(y_ref.dtype)
+
+    @pl.when(ti == nt - 1)
+    def _flush_state():
+        s_out_ref[0, 0] = s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_pallas(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                u: jax.Array, *, chunk: int = 64, interpret: bool = True):
+    """r, k, v: [B, T, H, N]; w: [B, T, H, N] decay in (0,1); u: [H, N].
+    Returns (y [B, T, H, N], s_end [B, H, N, N])."""
+    b, t, h, n = r.shape
+    assert t % chunk == 0, (t, chunk)
+    grid = (b, h, t // chunk)
+    io_spec = pl.BlockSpec((1, chunk, 1, n),
+                           lambda b_, h_, ti: (b_, ti, h_, 0))
+    y, s_end = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[io_spec, io_spec, io_spec, io_spec,
+                  pl.BlockSpec((1, n), lambda b_, h_, ti: (h_, 0))],
+        out_specs=[io_spec,
+                   pl.BlockSpec((1, 1, n, n),
+                                lambda b_, h_, ti: (b_, h_, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((b, t, h, n), r.dtype),
+                   jax.ShapeDtypeStruct((b, h, n, n), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return y, s_end

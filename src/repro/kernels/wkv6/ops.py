@@ -1,0 +1,19 @@
+"""Public wrapper for the WKV-6 kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import wkv6_pallas
+
+__all__ = ["wkv6"]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, *, chunk: int = 64, interpret: bool = True):
+    t = r.shape[1]
+    while t % chunk:
+        chunk //= 2
+    return wkv6_pallas(r, k, v, w, u, chunk=chunk, interpret=interpret)

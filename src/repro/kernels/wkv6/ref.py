@@ -1,0 +1,23 @@
+"""Naive step-scan oracle for the WKV-6 recurrence (also the oracle for the
+chunked associative-scan train path in ``models/ssm.py``)."""
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u):
+    """r,k,v,w: [B, T, H, N]; u: [H, N] → (y [B,T,H,N], s_end [B,H,N,N])."""
+    b, t, h, n = r.shape
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+
+    def step(s, inp):
+        ri, ki, vi, wi = inp          # [B, H, N]
+        kv = ki[..., :, None] * vi[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", ri,
+                       s + u[None, :, :, None] * kv)
+        s = wi[..., None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    s0 = jnp.zeros((b, h, n, n), jnp.float32)
+    s_end, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), s_end

@@ -1,0 +1,229 @@
+"""Roofline cost extraction from compiled artifacts.
+
+``compiled.cost_analysis()`` does not multiply ``while``-loop bodies by
+their trip counts, so a scanned-layers model reports ~1/L of its real cost.
+Instead of parsing loop trip counts out of HLO, we compile SMALL UNROLLED
+variants (every ``lax.scan`` fully unrolled → no loops → cost_analysis is
+exact) and solve a linear model that is exact for homogeneous stacks:
+
+    cost(L, µ) = f0 + fl·L  +  µ · (g0 + gl·L)
+
+where L counts layer-periods (a Jamba superblock is one period), µ is the
+gradient-accumulation factor, f is per-step-fixed (optimizer update,
+embedding tables...) and g is per-microbatch (fwd+bwd).  Four compiles pin
+the four coefficients:
+
+    A = cost(1 period, µ=1)     B = cost(2 periods, µ=1)
+    C = cost(1 period, µ=2)     D = cost(2 periods, µ=2)
+
+Serve steps have no µ: two compiles (A, B) suffice.  Every number comes
+from ``compiled.cost_analysis()`` + the HLO collective parse of those
+artifacts — no hand FLOP counting.  Remat recompute is included (the
+backward of the unrolled, checkpointed body contains it), which is exactly
+what the MODEL_FLOPS/HLO_FLOPS ratio in §Roofline is supposed to expose.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..models import build_model
+from ..optim.adamw import adamw_init
+from ..sharding.partition import batch_spec, param_shardings, param_specs
+from ..train.step import make_train_step
+from .hlo_stats import collective_bytes
+from .input_specs import ShapeCell, input_specs, train_microbatches
+
+__all__ = ["analyze_cell", "model_flops"]
+
+_ANALYSIS_CHUNK = 1024     # coarser SSM chunking for the unrolled compiles
+
+
+def _layer_period(cfg: ModelConfig) -> int:
+    return cfg.attn_every or 1
+
+
+def _with_periods(cfg: ModelConfig, periods: int, seq: int) -> ModelConfig:
+    period = _layer_period(cfg)
+    kw = dict(num_layers=periods * period, unroll_scans=True,
+              ssm_chunk=min(_ANALYSIS_CHUNK, seq))
+    if cfg.num_encoder_layers:
+        kw["num_encoder_layers"] = periods * period
+    return cfg.replace(**kw)
+
+
+def _cost_of(compiled) -> Dict[str, float]:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll_bytes": float(coll["total"]),
+            "coll_detail": coll}
+
+
+def _combine(a, b, fn):
+    out = {}
+    for k in ("flops", "bytes", "coll_bytes"):
+        out[k] = fn(a[k], b[k])
+    return out
+
+
+def _compile_cost(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                  batch_rows: int, n_micro: int,
+                  fsdp: Optional[Tuple[str, ...]],
+                  layout: str = "tp") -> Dict[str, float]:
+    model = build_model(cfg)
+    params_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    from .dryrun import _input_shardings
+    tp = layout != "dp"
+    all_axes = tuple(mesh.shape.keys())
+    p_sh = param_shardings(params_sds, mesh, fsdp_axes=fsdp,
+                           tensor_parallel=tp,
+                           embed_replicated=layout.endswith("-er"))
+    cell_eff = ShapeCell(cell.name, cell.seq_len, batch_rows, cell.kind)
+    batch_sds = input_specs(cfg, cell_eff)
+    b_sh = _input_shardings(batch_sds, mesh,
+                            axes=None if tp else all_axes)
+
+    if cell.kind == "train":
+        opt_sds = jax.eval_shape(adamw_init, params_sds)
+        m_specs = param_specs(params_sds, mesh,
+                              fsdp_axes=tuple(a for a in ("pod", "data")
+                                              if a in mesh.shape),
+                              fsdp_min_size=1 << 16)
+        o_sh = opt_sds.__class__(
+            step=NamedSharding(mesh, P()),
+            m=jax.tree.map(lambda s: NamedSharding(mesh, s), m_specs),
+            v=jax.tree.map(lambda s: NamedSharding(mesh, s), m_specs))
+        step_fn = make_train_step(model, num_microbatches=n_micro,
+                                  unroll=True)
+        fn = jax.jit(step_fn, in_shardings=(p_sh, o_sh, b_sh, None),
+                     out_shardings=(p_sh, o_sh, None),
+                     donate_argnums=(0, 1))
+        args = (params_sds, opt_sds, batch_sds,
+                jax.ShapeDtypeStruct((), jnp.float32))
+    elif cell.kind == "prefill":
+        fn = jax.jit(lambda p, b: model.prefill(p, b, cell.seq_len),
+                     in_shardings=(p_sh, b_sh))
+        args = (params_sds, batch_sds)
+    else:
+        from .dryrun import _cache_shardings
+        pf_batch = input_specs(cfg, ShapeCell("ctx", cell.seq_len,
+                                              batch_rows, "prefill"))
+        cache_sds = jax.eval_shape(
+            lambda p, bt: model.prefill(p, bt, cell.seq_len),
+            params_sds, pf_batch)[1]
+        c_sh = _cache_shardings(cache_sds, mesh, batch_rows, cell.seq_len)
+        tok_sds = jax.ShapeDtypeStruct((batch_rows, 1), jnp.int32)
+        fn = jax.jit(
+            lambda p, tok, cache, pos: model.decode_step(p, tok, cache, pos),
+            in_shardings=(p_sh, _input_shardings(tok_sds, mesh), c_sh, None),
+            out_shardings=(None, c_sh), donate_argnums=(2,))
+        args = (params_sds, tok_sds, cache_sds,
+                jax.ShapeDtypeStruct((), jnp.int32))
+
+    with mesh:
+        compiled = fn.lower(*args).compile()
+        return _cost_of(compiled)
+
+
+def analyze_cell(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                 fsdp: Optional[Tuple[str, ...]],
+                 n_micro: Optional[int] = None,
+                 layout: str = "tp") -> Dict:
+    """Extrapolated whole-step cost for (cfg, cell) on ``mesh``."""
+    t0 = time.time()
+    period = _layer_period(cfg)
+    n_periods = cfg.num_layers // period
+    assert n_periods >= 1
+
+    if cell.kind == "train":
+        n_micro = n_micro or train_microbatches(cfg, cell)
+        rows_per_micro = max(1, cell.global_batch // n_micro)
+        a = _compile_cost(_with_periods(cfg, 1, cell.seq_len), cell, mesh,
+                          rows_per_micro, 1, fsdp, layout)
+        b = _compile_cost(_with_periods(cfg, 2, cell.seq_len), cell, mesh,
+                          rows_per_micro, 1, fsdp, layout)
+        c = _compile_cost(_with_periods(cfg, 1, cell.seq_len), cell, mesh,
+                          2 * rows_per_micro, 2, fsdp, layout)
+        d = _compile_cost(_with_periods(cfg, 2, cell.seq_len), cell, mesh,
+                          2 * rows_per_micro, 2, fsdp, layout)
+        total = {}
+        for k in ("flops", "bytes", "coll_bytes"):
+            gl = d[k] - b[k] - c[k] + a[k]
+            g0 = c[k] - a[k] - gl
+            fl = b[k] - a[k] - gl
+            f0 = a[k] - fl - g0 - gl
+            # clamp: XLA may emit FEWER collectives at larger L (fusion
+            # noise); whole-step cost can never be below the 1-period point
+            total[k] = max(f0 + fl * n_periods
+                           + n_micro * (g0 + gl * n_periods), a[k], 0.0)
+        detail = {"A": a, "B": b, "C": c, "D": d,
+                  "n_micro": n_micro, "rows_per_micro": rows_per_micro}
+    else:
+        a = _compile_cost(_with_periods(cfg, 1, cell.seq_len), cell, mesh,
+                          cell.global_batch, 1, fsdp, layout)
+        b = _compile_cost(_with_periods(cfg, 2, cell.seq_len), cell, mesh,
+                          cell.global_batch, 1, fsdp, layout)
+        total = {}
+        for k in ("flops", "bytes", "coll_bytes"):
+            per = b[k] - a[k]
+            total[k] = max(a[k] - per + per * n_periods, a[k], 0.0)
+        detail = {"A": a, "B": b}
+    total["analysis_s"] = round(time.time() - t0, 1)
+    total["collective_kinds"] = {
+        k: v for k, v in detail["A"]["coll_detail"].items()
+        if k != "total" and v > 0}
+    return {"extrapolated": total, "points": {
+        k: {kk: vv for kk, vv in v.items() if kk != "coll_detail"}
+        for k, v in detail.items() if isinstance(v, dict)},
+        "n_micro": detail.get("n_micro", 1)}
+
+
+def model_flops(cfg: ModelConfig, cell: ShapeCell) -> float:
+    """MODEL_FLOPS = 6·N_active·D for train, 2·N_active·D for inference —
+    the 'useful work' yardstick for the HLO ratio."""
+    # active params per token (matmul params only, embeddings excluded)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    attn = d * hd * (cfg.num_heads * 2 + cfg.num_kv_heads * 2)
+    period = _layer_period(cfg) or 1
+    n_attn_per_period = 1 if cfg.attn_every else period
+    n_mamba = (period - 1) if cfg.attn_every else 0
+    di, ds = cfg.mamba_d_inner, cfg.mamba_d_state
+    mamba = (d * 2 * di + di * (cfg.resolved_dt_rank + 2 * ds)
+             + cfg.resolved_dt_rank * di + di * ds + di * d)
+    if cfg.family == "ssm":                      # rwkv6
+        attn = 5 * d * d                          # r,k,v,g,o projections
+        n_attn_per_period, n_mamba = 1, 0
+    if cfg.num_experts:
+        ff_active = 3 * d * cfg.resolved_moe_d_ff * cfg.num_experts_per_tok
+        n_moe = period // cfg.moe_layer_period
+        n_dense_ff = period - n_moe if cfg.attn_every else 0
+        ff = ff_active * n_moe + 3 * d * cfg.d_ff * n_dense_ff
+    else:
+        ff = 3 * d * cfg.d_ff * period
+    per_period = attn * n_attn_per_period + mamba * n_mamba + ff
+    n_periods = cfg.num_layers // period
+    n_active = per_period * n_periods + d * cfg.vocab_size  # + lm head
+    if cfg.num_encoder_layers:
+        n_active += (attn * 2 + 3 * d * cfg.d_ff) * cfg.num_encoder_layers
+    seq = cell.seq_len
+    if cfg.num_encoder_layers:
+        seq = seq // 2        # half source (encoder), half target tokens
+    head = d * cfg.vocab_size
+    trunk = n_active - head
+    if cell.kind == "train":
+        tokens = seq * cell.global_batch
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = seq * cell.global_batch
+        # the head only runs at the last position during prefill
+        return 2.0 * (trunk * tokens + head * cell.global_batch)
+    return 2.0 * n_active * cell.global_batch    # decode: 1 token/seq

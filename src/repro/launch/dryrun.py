@@ -1,0 +1,281 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import: jax locks the device
+# count at first initialization, and the production dry-run needs 512
+# placeholder host devices to build the 16×16 and 2×16×16 meshes.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from typing import Dict, Optional, Tuple  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import get_config, list_configs  # noqa: E402
+from ..models import build_model                # noqa: E402
+from ..optim.adamw import adamw_init            # noqa: E402
+from ..sharding.partition import (batch_spec, param_shardings,  # noqa: E402
+                                  param_specs)
+from ..train.step import make_train_step        # noqa: E402
+from .hlo_stats import collective_bytes         # noqa: E402
+from .input_specs import (SHAPES, cell_is_applicable,  # noqa: E402
+                          input_specs, shape_by_name, train_microbatches)
+from .mesh import make_production_mesh          # noqa: E402
+
+#: parameter-byte threshold above which parameters are FSDP-sharded over the
+#: data axes in addition to tensor/expert parallelism.
+_FSDP_PARAM_BYTES = 40e9
+
+
+def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _input_shardings(batch_sds, mesh: Mesh, axes=None):
+    """Shard each input's leading (batch) dim over the given axes (default:
+    the data axes) when divisible; replicate otherwise (e.g. the batch-1
+    long-context cells)."""
+    daxes = axes if axes is not None else _data_axes(mesh)
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh.shape[a]
+    spec_ok = P(daxes if len(daxes) > 1 else daxes[0])
+
+    def one(x):
+        if x.ndim >= 1 and x.shape[0] % dsize == 0:
+            return NamedSharding(mesh, spec_ok)
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, batch_sds)
+
+
+def _tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def _cache_shardings(cache_sds, mesh: Mesh, global_batch: int, seq: int):
+    """Decode-cache layout: batch over data axes; the context/seq dim over
+    ``model`` (flash-decode style — big caches must not replicate); small
+    state leaves fall back to replication."""
+    daxes = _data_axes(mesh)
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh.shape[a]
+    msize = mesh.shape["model"]
+
+    def one(x):
+        spec = [None] * x.ndim
+        dims = list(x.shape)
+        bi = next((i for i, d in enumerate(dims)
+                   if d == global_batch and d > 1 and d % dsize == 0), None)
+        if bi is not None:
+            spec[bi] = daxes if len(daxes) > 1 else daxes[0]
+            dims[bi] = -1
+        si = next((i for i, d in enumerate(dims)
+                   if d >= 4096 and d % msize == 0), None)
+        if si is not None:
+            spec[si] = "model"
+        elif bi is None:
+            # no batch, no seq: shard the largest divisible dim over data
+            cands = [i for i, d in enumerate(dims) if d % dsize == 0
+                     and d >= dsize and x.size >= 1 << 20]
+            if cands:
+                i = max(cands, key=lambda j: dims[j])
+                spec[i] = daxes if len(daxes) > 1 else daxes[0]
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, cache_sds)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             microbatches: Optional[int] = None,
+             policy_override: Optional[str] = None,
+             save_hlo_to: Optional[str] = None,
+             analyze: bool = False, layout: str = "tp",
+             cfg_overrides: Optional[Dict] = None) -> Dict:
+    cfg = get_config(arch)
+    if policy_override:
+        cfg = cfg.replace(dispatch_policy=policy_override)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    cell = shape_by_name(shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    base = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "kind": cell.kind}
+    ok, why = cell_is_applicable(cfg, cell)
+    if not ok:
+        return {**base, "status": "skipped", "reason": why}
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    params_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    param_bytes = _tree_bytes(params_sds)
+    all_axes = tuple(mesh.shape.keys())
+    tp = layout != "dp"
+    embed_rep = layout.endswith("-er")
+    fsdp = (_data_axes(mesh) if tp else all_axes) \
+        if (param_bytes > _FSDP_PARAM_BYTES or not tp
+            and param_bytes > 8e9) else None
+    p_sh = param_shardings(params_sds, mesh, fsdp_axes=fsdp,
+                           tensor_parallel=tp, embed_replicated=embed_rep)
+    batch_axes = _data_axes(mesh) if tp else all_axes
+    batch_sds = input_specs(cfg, cell)
+    b_sh = _input_shardings(batch_sds, mesh, axes=batch_axes)
+    base["layout"] = layout
+
+    if cell.kind == "train":
+        n_micro = microbatches or train_microbatches(cfg, cell)
+        opt_sds = jax.eval_shape(adamw_init, params_sds)
+        zero1 = _data_axes(mesh)
+        # ZeRO-1: moments get params' specs + fsdp over the data axes
+        m_specs = param_specs(params_sds, mesh, fsdp_axes=zero1,
+                              fsdp_min_size=1 << 16)
+        o_sh = opt_sds.__class__(
+            step=NamedSharding(mesh, P()),
+            m=jax.tree.map(lambda s: NamedSharding(mesh, s), m_specs),
+            v=jax.tree.map(lambda s: NamedSharding(mesh, s), m_specs))
+        step_fn = make_train_step(model, num_microbatches=n_micro)
+        fn = jax.jit(step_fn,
+                     in_shardings=(p_sh, o_sh, b_sh, None),
+                     out_shardings=(p_sh, o_sh, None),
+                     donate_argnums=(0, 1))
+        args = (params_sds, opt_sds, batch_sds,
+                jax.ShapeDtypeStruct((), jnp.float32))
+        base["microbatches"] = n_micro
+    elif cell.kind == "prefill":
+        fn = jax.jit(lambda p, b: model.prefill(p, b, cell.seq_len),
+                     in_shardings=(p_sh, b_sh))
+        args = (params_sds, batch_sds)
+    else:  # decode
+        pf_batch = input_specs(cfg, cell.__class__(
+            name="ctx", seq_len=cell.seq_len,
+            global_batch=cell.global_batch, kind="prefill"))
+        cache_sds = jax.eval_shape(
+            lambda p, bt: model.prefill(p, bt, cell.seq_len),
+            params_sds, pf_batch)[1]
+        c_sh = _cache_shardings(cache_sds, mesh, cell.global_batch,
+                                cell.seq_len)
+        tok_sds = input_specs(cfg, cell)["token"]
+        fn = jax.jit(
+            lambda p, tok, cache, pos: model.decode_step(p, tok, cache, pos),
+            in_shardings=(p_sh, _input_shardings(tok_sds, mesh), c_sh, None),
+            out_shardings=(None, c_sh), donate_argnums=(2,))
+        args = (params_sds, tok_sds, cache_sds,
+                jax.ShapeDtypeStruct((), jnp.int32))
+
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        if save_hlo_to:
+            with open(save_hlo_to, "w") as f:
+                f.write(hlo)
+
+    result = {
+        **base,
+        "status": "ok",
+        "param_bytes": param_bytes,
+        "fsdp": bool(fsdp),
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": coll,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+    }
+    if analyze:
+        from .analyze import analyze_cell, model_flops
+        result["analysis"] = analyze_cell(
+            cfg, cell, mesh, fsdp,
+            n_micro=microbatches, layout=layout)
+        result["model_flops"] = model_flops(cfg, cell)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--policy", default=None,
+                    help="override MoE dispatch policy (priority|arrival)")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--analyze", action="store_true",
+                    help="add extrapolated whole-step roofline costs")
+    ap.add_argument("--layout", default="tp", choices=["tp", "dp"])
+    ap.add_argument("--tag", default="",
+                    help="suffix for output filenames (perf variants)")
+    args = ap.parse_args()
+
+    archs = list(list_configs()) if args.arch == "all" else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.shape == "all" \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch}__{shape}__{'multi' if multi else 'single'}"
+                if args.policy:
+                    tag += f"__{args.policy}"
+                if args.layout != "tp":
+                    tag += f"__{args.layout}"
+                if args.tag:
+                    tag += f"__{args.tag}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[cached ] {tag}")
+                    continue
+                print(f"[running] {tag} ...", flush=True)
+                try:
+                    res = run_cell(arch, shape, multi,
+                                   microbatches=args.microbatches,
+                                   policy_override=args.policy,
+                                   save_hlo_to=args.save_hlo,
+                                   analyze=args.analyze and not multi,
+                                   layout=args.layout)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    res = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if multi else "16x16",
+                           "status": "error", "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                status = res["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f" flops={res['flops']:.3e}"
+                             f" coll={res['collective_bytes']['total']:.3e}B"
+                             f" compile={res['compile_s']}s")
+                print(f"[{status:7s}] {tag}{extra}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Parse collective traffic out of compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` has FLOPs and HBM bytes but no collective
+traffic, so the roofline's third term comes from summing operand sizes of
+every collective instruction in ``compiled.as_text()``.
+
+Post-optimization HLO prints operands WITHOUT types (``all-reduce(%x)``), so
+a symbol table of every defined instruction (``%name = TYPE op(...)``) is
+built first and operand bytes are resolved through it.  All shapes in the
+SPMD executable are per-partition, so the returned numbers are bytes per
+device (consistent with ``cost_analysis`` being per-device too).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+__all__ = ["collective_bytes", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast")
+
+_TYPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:e[0-9]+m[0-9]+(?:fn)?)?|pred"
+                      r"|token)\[([0-9,]*)\]")
+# %name = <type...> opcode(...)
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+"
+                     r"([\w\-]+)\(", re.M)
+
+
+def _type_bytes(s: str) -> int:
+    total = 0
+    for dtype, dims in _TYPE_RE.findall(s):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device operand bytes per collective kind (plus 'total').
+    ``*-done`` ops are skipped (their ``*-start`` is counted)."""
+    types: Dict[str, int] = {}
+    instrs = []
+    for m in _DEF_RE.finditer(hlo_text):
+        name, type_str, opcode = m.groups()
+        types[name] = _type_bytes(type_str)
+        base = opcode.removesuffix("-start")
+        if base in _COLLECTIVES and not opcode.endswith("-done"):
+            # operand list: from after '(' to the first ')'
+            rest = hlo_text[m.end():]
+            operands = rest.split(")", 1)[0]
+            instrs.append((base, operands, types[name]))
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for kind, operands, result_bytes in instrs:
+        names = re.findall(r"%([\w.\-]+)", operands)
+        ob = sum(types.get(n, 0) for n in names)
+        # inline-typed operands (unoptimized HLO) as fallback
+        ob = ob or _type_bytes(operands) or result_bytes
+        out[kind] += ob
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out

@@ -1,0 +1,110 @@
+"""ShapeDtypeStruct stand-ins for every (architecture × input-shape) cell.
+
+No allocation happens here; the dry-run lowers against these.  Shapes follow
+the assignment:
+
+    train_4k     seq_len=4,096   global_batch=256   (train_step)
+    prefill_32k  seq_len=32,768  global_batch=32    (serve prefill)
+    decode_32k   seq_len=32,768  global_batch=128   (serve decode: 1 token,
+                                                     KV cache of seq_len)
+    long_500k    seq_len=524,288 global_batch=1     (long-context decode;
+                                                     SSM/hybrid/SWA only)
+
+VLM cells reserve ``num_image_tokens`` of the sequence for the (stub)
+frontend's precomputed patch embeddings; encdec cells split the sequence
+half source embeddings (stub audio frontend) / half target tokens.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+__all__ = ["SHAPES", "ShapeCell", "input_specs", "cell_is_applicable",
+           "train_microbatches"]
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES: Tuple[ShapeCell, ...] = (
+    ShapeCell("train_4k", 4_096, 256, "train"),
+    ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    ShapeCell("decode_32k", 32_768, 128, "decode"),
+    ShapeCell("long_500k", 524_288, 1, "decode"),
+)
+
+
+def shape_by_name(name: str) -> ShapeCell:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+def cell_is_applicable(cfg: ModelConfig, cell: ShapeCell) -> Tuple[bool, str]:
+    """long_500k requires sub-quadratic context (SSM / hybrid / SWA)."""
+    if cell.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("full attention at 524k context: unbounded KV cache; "
+                       "skipped per assignment (see DESIGN.md)")
+    return True, ""
+
+
+def train_microbatches(cfg: ModelConfig, cell: ShapeCell) -> int:
+    """Gradient-accumulation factor bounding activation memory."""
+    if cell.kind != "train":
+        return 1
+    tokens = cell.seq_len * cell.global_batch
+    # target ≤ ~128k tokens per microbatch for the wide models
+    if cfg.d_model >= 4096 or cfg.num_experts >= 64:
+        return max(1, tokens // 131_072)
+    return max(1, tokens // 262_144)
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _f(shape, dtype=jnp.bfloat16):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict:
+    """Batch ShapeDtypeStructs for the cell's step function.
+
+    train  → the batch dict for train_step
+    prefill→ the batch dict for model.prefill
+    decode → {"token": [B,1], "pos": []} (cache specs come from
+             ``model.init_cache`` via eval_shape in the dry-run)
+    """
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "decode":
+        return {"token": _i32((b, 1))}
+    if cfg.family == "vlm":
+        s_text = s - cfg.num_image_tokens
+        batch = {"tokens": _i32((b, s_text)),
+                 "image_embeds": _f((b, cfg.num_image_tokens,
+                                     cfg.vision_embed_dim))}
+        if cell.kind == "train":
+            batch["labels"] = _i32((b, s_text))
+        return batch
+    if cfg.family == "encdec":
+        half = s // 2
+        batch = {"src_embeds": _f((b, half, cfg.audio_embed_dim)),
+                 "tokens": _i32((b, half))}
+        if cell.kind == "train":
+            batch["labels"] = _i32((b, half))
+        return batch
+    batch = {"tokens": _i32((b, s))}
+    if cell.kind == "train":
+        batch["labels"] = _i32((b, s))
+    return batch

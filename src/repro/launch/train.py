@@ -1,0 +1,103 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b \
+        --smoke --steps 200 --ckpt-dir runs/ckpt
+
+``--smoke`` scales the architecture down to a ~100M-class model runnable on
+CPU; without it the full config runs (TPU pods).  The loop integrates the
+production substrate: deterministic sharded data pipeline, AdamW + warmup
+cosine, async checkpointing, straggler detection hooks, and restart-safe
+resume from the latest checkpoint.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import CheckpointManager, latest_step
+from ..configs import get_config, scale_down
+from ..data import DataPipeline, SyntheticCorpus
+from ..models import build_model
+from ..optim import adamw_init, warmup_cosine
+from ..runtime import StragglerDetector
+from ..train import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable ~100M-class)")
+    ap.add_argument("--smoke-dmodel", type=int, default=256)
+    ap.add_argument("--smoke-layers", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = scale_down(cfg, layers=args.smoke_layers,
+                         d_model=args.smoke_dmodel,
+                         d_ff=args.smoke_dmodel * 4,
+                         vocab=min(cfg.vocab_size, 32768))
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(key)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params:,} "
+          f"(~{n_params / 1e6:.1f}M)")
+
+    opt = adamw_init(params)
+    step_fn = jax.jit(make_train_step(model,
+                                      num_microbatches=args.microbatches))
+    pipe = DataPipeline(SyntheticCorpus(cfg.vocab_size, seed=args.seed),
+                        global_batch=args.global_batch,
+                        seq_len=args.seq_len)
+    start = 0
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    if mgr and latest_step(args.ckpt_dir) is not None:
+        state, manifest = mgr.restore_latest(
+            {"params": params, "opt": opt})
+        params, opt = state["params"], state["opt"]
+        start = manifest["step"]
+        pipe.state.step = start
+        print(f"resumed from step {start}")
+
+    detector = StragglerDetector(num_hosts=1)
+    for step in range(start, args.steps):
+        lr = warmup_cosine(step, peak_lr=args.lr,
+                           warmup_steps=max(args.steps // 20, 5),
+                           total_steps=args.steps)
+        batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+        t0 = time.perf_counter()
+        params, opt, metrics = step_fn(params, opt, batch,
+                                       jnp.float32(lr))
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        detector.record_step(0, dt)
+        if step % 10 == 0 or step == args.steps - 1:
+            toks = args.global_batch * args.seq_len / dt
+            print(f"step {step:5d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.2f} "
+                  f"lr={float(lr):.2e} {dt * 1e3:.0f}ms "
+                  f"({toks:.0f} tok/s)")
+        if mgr and (step + 1) % args.ckpt_every == 0:
+            mgr.save(step + 1, {"params": params, "opt": opt})
+    if mgr:
+        mgr.save(args.steps, {"params": params, "opt": opt},
+                 blocking=True)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

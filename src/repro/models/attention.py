@@ -1,0 +1,224 @@
+"""Grouped-query attention with RoPE, optional sliding window, qk-norm and
+QKV bias; full-sequence (training/prefill) and single-token (decode) paths.
+
+The decode path supports a sequence-sharded KV cache (long-context): the
+attention below is written as plain einsums + softmax so XLA's SPMD
+partitioner inserts the collectives; the hand-optimized two-pass
+flash-decode variant lives in ``kernels/flash_attention`` and in
+``distributed.py`` (used during the perf hillclimb).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import apply_rope, init_linear, init_rms_norm, linear, rms_norm
+
+__all__ = ["init_attention", "attention_fwd", "attention_decode", "KVCache"]
+
+
+class KVCache(NamedTuple):
+    k: jax.Array   # [B, S_max, kvH, hd]
+    v: jax.Array   # [B, S_max, kvH, hd]
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": init_linear(k1, cfg.d_model, cfg.num_heads * hd,
+                          bias=cfg.qkv_bias, dtype=dtype),
+        "wk": init_linear(k2, cfg.d_model, cfg.num_kv_heads * hd,
+                          bias=cfg.qkv_bias, dtype=dtype),
+        "wv": init_linear(k3, cfg.d_model, cfg.num_kv_heads * hd,
+                          bias=cfg.qkv_bias, dtype=dtype),
+        "wo": init_linear(k4, cfg.num_heads * hd, cfg.d_model, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms_norm(hd, dtype)
+        p["k_norm"] = init_rms_norm(hd, dtype)
+    return p
+
+
+def _project_qkv(p: dict, x: jax.Array, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = linear(p["wq"], x).reshape(b, s, cfg.num_heads, hd)
+    k = linear(p["wk"], x).reshape(b, s, cfg.num_kv_heads, hd)
+    v = linear(p["wv"], x).reshape(b, s, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q: [B,S,H,hd]; k,v: [B,T,Hkv,hd]; GQA by head-group reshape."""
+    b, s, h, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    q = q.reshape(b, s, hkv, g, hd)
+    logits = jnp.einsum("bskgd,btkd->bkgst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask[:, None, None, :, :], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, h, hd)
+
+
+#: sequences at least this long take the chunked online-softmax path
+_CHUNK_THRESHOLD = 8192
+_Q_CHUNK = 1024
+_KV_CHUNK = 2048
+
+
+def _sdpa_chunked(q, k, v, scale, causal: bool, window: Optional[int],
+                  kv_len: Optional[int] = None):
+    """Flash-attention algorithm in plain XLA ops: double scan over query
+    and key/value chunks with a running (max, denom, accumulator) — peak
+    memory O(S·d + chunk²) instead of O(S²).  Inference path (prefill of
+    long contexts); the Pallas kernel is the TPU-native version of the same
+    loop."""
+    b, s, h, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qc, kc = _Q_CHUNK, _KV_CHUNK
+    assert s % qc == 0 and t % kc == 0, (s, t)
+    qf = q.reshape(b, s // qc, qc, hkv, g, hd).astype(jnp.float32)
+    kf = k.reshape(b, t // kc, kc, hkv, hd).astype(jnp.float32)
+    vf = v.reshape(b, t // kc, kc, hkv, hd).astype(jnp.float32)
+
+    def q_step(_, qi):
+        qblk, qidx = qi           # [B, qc, hkv, g, hd], []
+        rows = qidx * qc + jnp.arange(qc)
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            kblk, vblk, kidx = ki
+            cols = kidx * kc + jnp.arange(kc)
+            s_blk = jnp.einsum("bqkgd,bckd->bkgqc", qblk, kblk) * scale
+            valid = jnp.ones((qc, kc), bool)
+            if causal:
+                valid &= cols[None, :] <= rows[:, None]
+            if window is not None:
+                valid &= rows[:, None] - cols[None, :] < window
+            if kv_len is not None:
+                valid &= cols[None, :] < kv_len
+            s_blk = jnp.where(valid[None, None, None], s_blk, -1e30)
+            m_new = jnp.maximum(m, s_blk.max(-1))
+            p = jnp.where(valid[None, None, None],
+                          jnp.exp(s_blk - m_new[..., None]), 0.0)
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqc,bckd->bkgqd", p, vblk)
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((b, hkv, g, qc, hd), jnp.float32)
+        m0 = jnp.full((b, hkv, g, qc), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, qc), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (kf.swapaxes(0, 1), vf.swapaxes(0, 1),
+             jnp.arange(t // kc)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.transpose(0, 3, 1, 2, 4)   # [B, qc, hkv, g, hd]
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (qf.swapaxes(0, 1), jnp.arange(s // qc)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, hd)
+    return out.astype(q.dtype)
+
+
+def causal_mask(s: int, window: Optional[int] = None,
+                dtype=bool) -> jax.Array:
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    m = j <= i
+    if window is not None:
+        m &= (i - j) < window
+    return m.astype(dtype)
+
+
+def attention_fwd(p: dict, x: jax.Array, cfg: ModelConfig,
+                  positions: Optional[jax.Array] = None,
+                  mask: Optional[jax.Array] = None,
+                  kv: Optional[tuple] = None,
+                  use_flash: bool = False,
+                  return_kv: bool = False):
+    """Full-sequence attention.  ``kv`` overrides keys/values for
+    cross-attention (tuple of [B,T,kvH,hd]).  With ``return_kv`` the
+    projected k/v are also returned (prefill fills the cache from them)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    if kv is not None:
+        k, v = kv
+    if mask is None:
+        if kv is None:
+            mask = causal_mask(s, cfg.sliding_window)[None]
+        else:
+            mask = jnp.ones((1, s, k.shape[1]), bool)
+    scale = cfg.resolved_head_dim ** -0.5
+    if use_flash:
+        from ..kernels.flash_attention.ops import flash_attention
+        out = flash_attention(q, k, v, causal=(kv is None),
+                              window=cfg.sliding_window, scale=scale)
+    elif (s >= _CHUNK_THRESHOLD or k.shape[1] >= _CHUNK_THRESHOLD) \
+            and s % _Q_CHUNK == 0 and k.shape[1] % _KV_CHUNK == 0:
+        out = _sdpa_chunked(q, k, v, scale, causal=(kv is None),
+                            window=cfg.sliding_window if kv is None
+                            else None)
+    else:
+        out = _sdpa(q, k, v, mask, scale)
+    y = linear(p["wo"], out.reshape(b, s, -1))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def attention_decode(p: dict, x: jax.Array, cache: KVCache, pos: jax.Array,
+                     cfg: ModelConfig) -> tuple[jax.Array, KVCache]:
+    """One-token decode.  x: [B, 1, D]; pos: [] or [B] current position
+    (per-sequence positions support continuous batching, where slots are at
+    different depths); cache holds S_max past positions (ring-buffered for
+    sliding window)."""
+    b = x.shape[0]
+    s_max = cache.k.shape[1]
+    hd = cfg.resolved_head_dim
+    pos_vec = jnp.broadcast_to(jnp.asarray(pos).reshape(-1), (b,))
+    positions = pos_vec[:, None]
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    # ring-buffer write (sliding window wraps; full cache: pos < s_max)
+    write_idx = pos_vec % s_max
+    bidx = jnp.arange(b)
+    k_cache = cache.k.at[bidx, write_idx].set(
+        k_new[:, 0].astype(cache.k.dtype))
+    v_cache = cache.v.at[bidx, write_idx].set(
+        v_new[:, 0].astype(cache.v.dtype))
+    # valid positions per sequence: j <= pos (within window when sliding)
+    j = jnp.arange(s_max)[None, :]
+    pcol = pos_vec[:, None]
+    valid = j <= pcol
+    if cfg.sliding_window is not None:
+        valid = (pcol - j < cfg.sliding_window) & (j <= pcol)
+        valid |= s_max <= pcol       # wrapped: the whole ring is valid
+    mask = valid[:, None, :]
+    out = _sdpa(q, k_cache, v_cache, mask, hd ** -0.5)
+    y = linear(p["wo"], out.reshape(b, 1, -1))
+    return y, KVCache(k_cache, v_cache)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, s_max: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    hd = cfg.resolved_head_dim
+    if cfg.sliding_window is not None:
+        s_max = min(s_max, cfg.sliding_window)
+    shape = (batch, s_max, cfg.num_kv_heads, hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))

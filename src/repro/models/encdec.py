@@ -1,0 +1,196 @@
+"""Encoder-decoder trunk (SeamlessM4T backbone).
+
+The speech/text frontend is a STUB per the assignment: encoder inputs are
+precomputed frame embeddings [B, S_src, audio_embed_dim].  The decoder is a
+standard causal stack with per-layer cross-attention; at serve time the
+cross K/V are projected once from the encoder output and reused every
+decode step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import (KVCache, attention_decode, attention_fwd,
+                        init_attention, init_kv_cache)
+from .layers import (dtype_of, embed, init_embedding, init_linear, init_mlp,
+                     init_rms_norm, linear, mlp, rms_norm)
+from .transformer import LMOutputs
+
+__all__ = ["init_encdec", "encdec_forward", "encdec_prefill",
+           "encdec_decode_step", "EncDecCache"]
+
+
+class EncDecCache(NamedTuple):
+    self_kv: KVCache        # [L, B, S_tgt_max, kvH, hd]
+    cross_k: jax.Array      # [L, B, S_src, kvH, hd]
+    cross_v: jax.Array
+
+
+def _init_enc_block(key, cfg: ModelConfig) -> dict:
+    dt = dtype_of(cfg)
+    k1, k2 = jax.random.split(key)
+    return {"ln1": init_rms_norm(cfg.d_model, dt),
+            "attn": init_attention(k1, cfg, dt),
+            "ln2": init_rms_norm(cfg.d_model, dt),
+            "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, dt)}
+
+
+def _init_dec_block(key, cfg: ModelConfig) -> dict:
+    dt = dtype_of(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": init_rms_norm(cfg.d_model, dt),
+            "self_attn": init_attention(k1, cfg, dt),
+            "ln_x": init_rms_norm(cfg.d_model, dt),
+            "cross_attn": init_attention(k2, cfg, dt),
+            "ln2": init_rms_norm(cfg.d_model, dt),
+            "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, dt)}
+
+
+def init_encdec(key, cfg: ModelConfig) -> dict:
+    dt = dtype_of(cfg)
+    ka, ke, kd, kt, kh = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ke, cfg.num_encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.num_layers)
+    p = {
+        "enc_blocks": jax.vmap(lambda k: _init_enc_block(k, cfg))(enc_keys),
+        "enc_ln_f": init_rms_norm(cfg.d_model, dt),
+        "embed": init_embedding(kt, cfg.vocab_size, cfg.d_model, dt),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_block(k, cfg))(dec_keys),
+        "ln_f": init_rms_norm(cfg.d_model, dt),
+        "lm_head": init_linear(kh, cfg.d_model, cfg.vocab_size, dtype=dt),
+    }
+    if cfg.audio_embed_dim and cfg.audio_embed_dim != cfg.d_model:
+        p["audio_proj"] = init_linear(ka, cfg.audio_embed_dim, cfg.d_model,
+                                      dtype=dt)
+    return p
+
+
+def _encode(params: dict, src_embeds: jax.Array, cfg: ModelConfig):
+    x = src_embeds.astype(dtype_of(cfg))
+    if "audio_proj" in params:
+        x = linear(params["audio_proj"], x)
+    s = x.shape[1]
+    positions = jnp.arange(s)[None, :]
+    full = jnp.ones((1, s, s), bool)
+
+    def body(h, pl):
+        y = h + attention_fwd(pl["attn"], rms_norm(pl["ln1"], h,
+                                                   cfg.norm_eps),
+                              cfg, positions, mask=full)
+        y = y + mlp(pl["mlp"], rms_norm(pl["ln2"], y, cfg.norm_eps))
+        return y, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_blocks"],
+                        unroll=cfg.unroll_scans)
+    return rms_norm(params["enc_ln_f"], x, cfg.norm_eps)
+
+
+def _cross_kv(pl: dict, enc_out: jax.Array, cfg: ModelConfig):
+    """Project encoder output to this layer's cross-attention K/V."""
+    b, s, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = linear(pl["cross_attn"]["wk"], enc_out).reshape(
+        b, s, cfg.num_kv_heads, hd)
+    v = linear(pl["cross_attn"]["wv"], enc_out).reshape(
+        b, s, cfg.num_kv_heads, hd)
+    return k, v
+
+
+def _dec_block_fwd(pl: dict, x: jax.Array, enc_out, cfg: ModelConfig,
+                   positions, return_kv: bool = False):
+    out = attention_fwd(pl["self_attn"],
+                        rms_norm(pl["ln1"], x, cfg.norm_eps), cfg,
+                        positions, return_kv=return_kv)
+    if return_kv:
+        out, self_kv = out
+    h = x + out
+    ck, cv = _cross_kv(pl, enc_out, cfg)
+    h = h + attention_fwd(pl["cross_attn"],
+                          rms_norm(pl["ln_x"], h, cfg.norm_eps), cfg,
+                          positions, kv=(ck, cv))
+    h = h + mlp(pl["mlp"], rms_norm(pl["ln2"], h, cfg.norm_eps))
+    if return_kv:
+        return h, (self_kv, (ck, cv))
+    return h, None
+
+
+def encdec_forward(params: dict, batch: dict, cfg: ModelConfig) -> LMOutputs:
+    """batch: {"src_embeds": [B,S_src,A], "tokens": [B,S_tgt]}."""
+    enc_out = _encode(params, batch["src_embeds"], cfg)
+    x = embed(params["embed"], batch["tokens"], cfg.onehot_embed)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(h, pl):
+        y, _ = _dec_block_fwd(pl, h, enc_out, cfg, positions)
+        return y, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_blocks"],
+                        unroll=cfg.unroll_scans)
+    x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+    return LMOutputs(linear(params["lm_head"], x))
+
+
+def encdec_prefill(params: dict, batch: dict, cfg: ModelConfig,
+                   s_max: Optional[int] = None):
+    """Encode source + run decoder prompt; cache self-KV and cross-KV."""
+    enc_out = _encode(params, batch["src_embeds"], cfg)
+    x = embed(params["embed"], batch["tokens"], cfg.onehot_embed)
+    b, s, _ = x.shape
+    s_max = s_max or s
+    positions = jnp.arange(s)[None, :]
+
+    def body(h, pl):
+        y, (self_kv, cross) = _dec_block_fwd(pl, h, enc_out, cfg, positions,
+                                             return_kv=True)
+        return y, (self_kv, cross)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, ((ks, vs), (cks, cvs)) = jax.lax.scan(body_fn, x,
+                                             params["dec_blocks"],
+                                             unroll=cfg.unroll_scans)
+    x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+    logits = linear(params["lm_head"], x[:, -1:])
+    one = init_kv_cache(cfg, b, s_max, dtype_of(cfg))
+    rep = lambda a: jnp.broadcast_to(
+        a[None], (cfg.num_layers,) + a.shape).copy()
+    kcache, vcache = rep(one.k), rep(one.v)
+    w = min(s, kcache.shape[2])
+    cache = EncDecCache(
+        self_kv=KVCache(
+            jax.lax.dynamic_update_slice_in_dim(kcache, ks[:, :, s - w:s],
+                                                0, 2),
+            jax.lax.dynamic_update_slice_in_dim(vcache, vs[:, :, s - w:s],
+                                                0, 2)),
+        cross_k=cks, cross_v=cvs)
+    return logits, cache
+
+
+def encdec_decode_step(params: dict, token: jax.Array, cache: EncDecCache,
+                       pos, cfg: ModelConfig):
+    x = embed(params["embed"], token, cfg.onehot_embed)
+    b = x.shape[0]
+
+    def body(h, layer):
+        pl, kv_k, kv_v, ck, cv = layer
+        y, new_kv = attention_decode(
+            pl["self_attn"], rms_norm(pl["ln1"], h, cfg.norm_eps),
+            KVCache(kv_k, kv_v), pos, cfg)
+        hh = h + y
+        mask = jnp.ones((b, 1, ck.shape[1]), bool)
+        hh = hh + attention_fwd(
+            pl["cross_attn"], rms_norm(pl["ln_x"], hh, cfg.norm_eps), cfg,
+            positions=jnp.asarray(pos).reshape(1, 1), mask=mask, kv=(ck, cv))
+        hh = hh + mlp(pl["mlp"], rms_norm(pl["ln2"], hh, cfg.norm_eps))
+        return hh, new_kv
+
+    x, new_kv = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache.self_kv.k, cache.self_kv.v,
+                  cache.cross_k, cache.cross_v), unroll=cfg.unroll_scans)
+    x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+    return linear(params["lm_head"], x), cache._replace(self_kv=new_kv)

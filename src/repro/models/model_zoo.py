@@ -1,0 +1,142 @@
+"""Uniform model interface over all assigned architecture families."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import encdec, hybrid, rwkv_lm, transformer
+from .transformer import LMOutputs
+
+__all__ = ["Model", "build_model", "lm_loss"]
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., dict]                  # (key) -> params
+    forward: Callable[..., LMOutputs]          # (params, batch) -> outputs
+    prefill: Callable[..., tuple]              # (params, batch, s_max)
+    decode_step: Callable[..., tuple]          # (params, token, cache, pos)
+    init_cache: Callable[..., Any]             # (batch, s_max) -> cache
+
+    def loss(self, params: dict, batch: dict) -> tuple[jax.Array, dict]:
+        return lm_loss(self, params, batch)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return Model(
+            cfg=cfg,
+            init=lambda key: transformer.init_lm(key, cfg),
+            forward=lambda p, b: transformer.lm_forward(p, b, cfg),
+            prefill=lambda p, b, s_max=None: transformer.lm_prefill(
+                p, b, cfg, s_max),
+            decode_step=lambda p, tok, cache, pos: transformer.lm_decode_step(
+                p, tok, cache, pos, cfg),
+            init_cache=lambda batch, s_max: transformer.init_lm_cache(
+                cfg, batch, s_max),
+        )
+    if fam == "ssm":
+        return Model(
+            cfg=cfg,
+            init=lambda key: rwkv_lm.init_rwkv_lm(key, cfg),
+            forward=lambda p, b: rwkv_lm.rwkv_forward(p, b, cfg),
+            prefill=lambda p, b, s_max=None: rwkv_lm.rwkv_prefill(
+                p, b, cfg, s_max),
+            decode_step=lambda p, tok, cache, pos: rwkv_lm.rwkv_decode_step(
+                p, tok, cache, pos, cfg),
+            init_cache=lambda batch, s_max: rwkv_lm.init_rwkv_cache(
+                cfg, batch),
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=lambda key: hybrid.init_hybrid_lm(key, cfg),
+            forward=lambda p, b: hybrid.hybrid_forward(p, b, cfg),
+            prefill=lambda p, b, s_max=None: hybrid.hybrid_prefill(
+                p, b, cfg, s_max),
+            decode_step=lambda p, tok, cache, pos: hybrid.hybrid_decode_step(
+                p, tok, cache, pos, cfg),
+            init_cache=lambda batch, s_max: hybrid.init_hybrid_cache(
+                cfg, batch, s_max),
+        )
+    if fam == "encdec":
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_encdec(key, cfg),
+            forward=lambda p, b: encdec.encdec_forward(p, b, cfg),
+            prefill=lambda p, b, s_max=None: encdec.encdec_prefill(
+                p, b, cfg, s_max),
+            decode_step=lambda p, tok, cache, pos: encdec.encdec_decode_step(
+                p, tok, cache, pos, cfg),
+            init_cache=None,  # produced by prefill (needs encoder output)
+        )
+    raise ValueError(f"unknown family: {fam}")
+
+
+def _xent(logits: jax.Array, labels: jax.Array,
+          vocab_chunk: int = 0) -> jax.Array:
+    """Mean next-token cross entropy in fp32 (numerically safe at V>150k).
+
+    ``vocab_chunk > 0`` computes the logsumexp blockwise over the vocab dim
+    (running max/denominator — the flash-softmax trick applied to the loss),
+    so the fp32 logits copy never materializes at full [.., V]."""
+    if not vocab_chunk:
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None],
+                                   axis=-1).squeeze(-1)
+        return (logz - gold).mean()
+    v = logits.shape[-1]
+    pad = (-v) % vocab_chunk
+    if pad:  # pad vocab with -inf-like logits (no mass)
+        logits = jnp.pad(logits, [(0, 0)] * (logits.ndim - 1) + [(0, pad)],
+                         constant_values=-1e30)
+        v += pad
+    n_chunks = v // vocab_chunk
+    lead = logits.shape[:-1]
+    chunks = jnp.moveaxis(
+        logits.reshape(*lead, n_chunks, vocab_chunk), -2, 0)
+
+    def body(carry, ch):
+        m, l = carry
+        ch = ch.astype(jnp.float32)
+        m2 = jnp.maximum(m, ch.max(-1))
+        l = l * jnp.exp(m - m2) + jnp.exp(ch - m2[..., None]).sum(-1)
+        return (m2, l), None
+
+    m0 = jnp.full(lead, -jnp.inf, jnp.float32)
+    l0 = jnp.zeros(lead, jnp.float32)
+    (m, l), _ = jax.lax.scan(body, (m0, l0), chunks)
+    logz = m + jnp.log(l)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1).squeeze(-1).astype(jnp.float32)
+    return (logz - gold).mean()
+
+
+def lm_loss(model: Model, params: dict, batch: dict) -> tuple[jax.Array, dict]:
+    """Cross-entropy on next-token labels + MoE auxiliary losses.
+
+    ``batch["labels"]`` aligns with the *text* tokens; for VLM the image
+    prefix positions are excluded automatically."""
+    out = model.forward(params, batch)
+    logits = out.logits
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:     # VLM: image prefix present
+        logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    loss = _xent(logits[:, :-1], labels[:, 1:],
+                 model.cfg.loss_vocab_chunk)
+    metrics = {"xent": loss}
+    if out.moe_aux is not None:
+        aux = out.moe_aux * model.cfg.router_aux_coef
+        loss = loss + aux
+        metrics["moe_aux"] = aux
+        if out.moe_dropped is not None:
+            metrics["moe_dropped_mass"] = jnp.asarray(out.moe_dropped).mean()
+    metrics["loss"] = loss
+    return loss, metrics

@@ -1,0 +1,88 @@
+"""Mixture-of-Experts layer with strategy-scheduled dispatch.
+
+Routing/dispatch is the paper's decision procedure compiled into the step
+(see ``core/device/moe_balance.py``): router probability = task priority,
+capacity overflow = dead tasks, second-choice restealing = idle experts
+stealing shed work.  The oblivious baseline (``dispatch_policy="arrival"``)
+reproduces a standard first-come-first-served MoE.
+
+Expert compute is a grouped matmul over the dispatch buffers
+([E, C, D] × [E, D, F]); the Pallas kernel in ``kernels/moe_gmm`` implements
+the TPU tiling, with the einsum here as the portable path / oracle.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..core.device.moe_balance import (combine_expert_outputs,
+                                       gather_expert_inputs,
+                                       priority_dispatch, route_topk)
+from .layers import init_linear
+
+__all__ = ["init_moe", "moe_fwd", "MoEStats", "moe_capacity"]
+
+
+class MoEStats(NamedTuple):
+    load: jax.Array          # [E] tokens kept per expert
+    dropped_mass: jax.Array  # [] router prob mass dropped (dead tasks)
+    aux_loss: jax.Array      # [] load-balancing auxiliary loss
+
+
+def moe_capacity(cfg: ModelConfig, num_tokens: int) -> int:
+    k, e = cfg.num_experts_per_tok, cfg.num_experts
+    return max(1, int(num_tokens * k * cfg.capacity_factor / e + 0.5))
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.resolved_moe_d_ff
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    scale_in = 1.0 / jnp.sqrt(d)
+    scale_out = 1.0 / jnp.sqrt(f)
+    return {
+        "router": init_linear(kr, d, e, dtype=jnp.float32),
+        "w_gate": (jax.random.normal(kg, (e, d, f)) * scale_in).astype(dtype),
+        "w_up": (jax.random.normal(ku, (e, d, f)) * scale_in).astype(dtype),
+        "w_down": (jax.random.normal(kd, (e, f, d)) * scale_out).astype(dtype),
+    }
+
+
+def _expert_ffn(p: dict, buf: jax.Array, use_kernel: bool) -> jax.Array:
+    """buf: [E, C, D] → [E, C, D] per-expert SwiGLU (grouped matmul)."""
+    if use_kernel:
+        from ..kernels.moe_gmm.ops import grouped_swiglu
+        return grouped_swiglu(buf, p["w_gate"], p["w_up"], p["w_down"])
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["w_down"])
+
+
+def moe_fwd(p: dict, x: jax.Array, cfg: ModelConfig,
+            use_kernel: bool = False) -> tuple[jax.Array, MoEStats]:
+    """x: [B, S, D] (or [T, D]) → same shape + stats."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    xt = x.reshape(-1, d)
+    t = xt.shape[0]
+    k, e = cfg.num_experts_per_tok, cfg.num_experts
+    cap = moe_capacity(cfg, t)
+
+    logits = xt.astype(jnp.float32) @ p["router"]["w"]
+    expert_idx, gate, probs = route_topk(logits, k)
+    plan = priority_dispatch(expert_idx, gate, probs, num_experts=e,
+                             capacity=cap, policy=cfg.dispatch_policy,
+                             resteal=cfg.dispatch_resteal)
+    buf = gather_expert_inputs(xt, plan, k)          # [E, C, D]
+    buf = _expert_ffn(p, buf, use_kernel)
+    y = combine_expert_outputs(buf, plan, t, k).astype(x.dtype)
+
+    # Switch-style load-balance aux loss: E * Σ_e f_e · P_e.
+    me = probs.mean(0)                                # mean router prob [E]
+    ce = plan.load.astype(jnp.float32) / jnp.maximum(plan.load.sum(), 1)
+    aux = e * jnp.sum(me * ce)
+    stats = MoEStats(load=plan.load, dropped_mass=plan.dropped_mass,
+                     aux_loss=aux)
+    return y.reshape(orig_shape), stats

@@ -1,0 +1,130 @@
+"""RWKV-6 language model stack (attention-free).
+
+Decode state is O(1) in sequence length: per layer a [B, H, N, N] wkv state
+plus two token-shift vectors — this is the designated ``long_500k``
+architecture.  Norms are RMS (the reference model uses LayerNorm; RMS keeps
+the trunk uniform and changes nothing structural).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import (dtype_of, embed, init_embedding, init_linear,
+                     init_rms_norm, linear, rms_norm)
+from .ssm import (RWKVState, init_rwkv_channel_mix, init_rwkv_time_mix,
+                  rwkv_channel_mix, rwkv_time_mix, rwkv_time_mix_decode)
+from .transformer import LMOutputs
+
+__all__ = ["init_rwkv_lm", "rwkv_forward", "rwkv_prefill",
+           "rwkv_decode_step", "init_rwkv_cache"]
+
+
+def _init_block(key, cfg: ModelConfig) -> dict:
+    dt = dtype_of(cfg)
+    k1, k2 = jax.random.split(key)
+    return {"ln1": init_rms_norm(cfg.d_model, dt),
+            "tm": init_rwkv_time_mix(k1, cfg, dt),
+            "ln2": init_rms_norm(cfg.d_model, dt),
+            "cm": init_rwkv_channel_mix(k2, cfg, dt)}
+
+
+def init_rwkv_lm(key, cfg: ModelConfig) -> dict:
+    dt = dtype_of(cfg)
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+    return {
+        "embed": init_embedding(ke, cfg.vocab_size, cfg.d_model, dt),
+        "blocks": jax.vmap(lambda k: _init_block(k, cfg))(layer_keys),
+        "ln_f": init_rms_norm(cfg.d_model, dt),
+        "lm_head": init_linear(kh, cfg.d_model, cfg.vocab_size, dtype=dt),
+    }
+
+
+def _block_fwd(p: dict, x: jax.Array, cfg: ModelConfig,
+               state: RWKVState | None):
+    tm_state = None if state is None else (state.tm_shift, state.s)
+    y, (tm_shift, s_end) = rwkv_time_mix(
+        p["tm"], rms_norm(p["ln1"], x, cfg.norm_eps), cfg, tm_state)
+    h = x + y
+    cm_prev = None if state is None else state.cm_shift
+    y2, cm_shift = rwkv_channel_mix(
+        p["cm"], rms_norm(p["ln2"], h, cfg.norm_eps), cfg, cm_prev)
+    return h + y2, RWKVState(tm_shift, cm_shift, s_end)
+
+
+def rwkv_forward(params: dict, batch: dict, cfg: ModelConfig) -> LMOutputs:
+    x = embed(params["embed"], batch["tokens"], cfg.onehot_embed)
+
+    def body(h, pl):
+        y, _ = _block_fwd(pl, h, cfg, None)
+        return y, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["blocks"],
+                        unroll=cfg.unroll_scans)
+    x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+    return LMOutputs(linear(params["lm_head"], x))
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int) -> RWKVState:
+    n = cfg.rwkv_head_size
+    h = cfg.d_model // n
+    dt = dtype_of(cfg)
+    return RWKVState(
+        tm_shift=jnp.zeros((cfg.num_layers, batch, cfg.d_model), dt),
+        cm_shift=jnp.zeros((cfg.num_layers, batch, cfg.d_model), dt),
+        s=jnp.zeros((cfg.num_layers, batch, h, n, n), jnp.float32))
+
+
+def rwkv_prefill(params: dict, batch: dict, cfg: ModelConfig,
+                 s_max: int | None = None):
+    """Run the prompt; the state-based cache is O(1) in prompt length."""
+    del s_max  # state size does not depend on context length
+    x = embed(params["embed"], batch["tokens"], cfg.onehot_embed)
+    b = x.shape[0]
+    zero = _zero_state(cfg, b)
+
+    def body(h, pl):
+        y, st = _block_fwd(pl, h, cfg, zero)
+        return y, st
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, states = jax.lax.scan(body_fn, x, params["blocks"],
+                             unroll=cfg.unroll_scans)
+    x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+    return linear(params["lm_head"], x[:, -1:]), states
+
+
+def _zero_state(cfg: ModelConfig, b: int) -> RWKVState:
+    n = cfg.rwkv_head_size
+    h = cfg.d_model // n
+    dt = dtype_of(cfg)
+    return RWKVState(jnp.zeros((b, cfg.d_model), dt),
+                     jnp.zeros((b, cfg.d_model), dt),
+                     jnp.zeros((b, h, n, n), jnp.float32))
+
+
+def rwkv_decode_step(params: dict, token: jax.Array, cache: RWKVState,
+                     pos, cfg: ModelConfig):
+    del pos  # stateful recurrence needs no position index
+    x = embed(params["embed"], token, cfg.onehot_embed)
+
+    def body(h, layer):
+        pl, st = layer
+        y, (tm_shift, s) = rwkv_time_mix_decode(
+            pl["tm"], rms_norm(pl["ln1"], h, cfg.norm_eps), cfg,
+            (st.tm_shift, st.s))
+        hh = h + y
+        y2, cm_shift = rwkv_channel_mix(
+            pl["cm"], rms_norm(pl["ln2"], hh, cfg.norm_eps), cfg,
+            st.cm_shift)
+        return hh + y2, RWKVState(tm_shift, cm_shift, s)
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache),
+                                unroll=cfg.unroll_scans)
+    x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+    return linear(params["lm_head"], x), new_cache

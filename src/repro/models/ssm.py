@@ -1,0 +1,323 @@
+"""State-space / linear-attention blocks: RWKV-6 (Finch) and Mamba.
+
+Both recurrences are evaluated with a **chunked scan**: an outer
+``lax.scan`` over time-chunks carries the state, and inside each chunk an
+associative scan composes the per-step transitions.  This bounds peak
+activation memory to one chunk's intermediates (rematerialized in the
+backward pass) while keeping the sequential depth at T/chunk — the same
+carry-scan structure as the paper's one-pass prefix sums, which is also
+exactly what the Pallas kernels in ``kernels/wkv6`` implement on the TPU
+grid.  Decode is the plain one-step recurrence on a carried state (O(1) in
+sequence length — these are the ``long_500k``-capable families).
+
+RWKV-6 recurrence (per head, k-dim N, v-dim N):
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+    y_t = r_tᵀ (S_{t-1} + diag(u) k_t v_tᵀ)
+with w_t = exp(-exp(w0 + lora(x))) data-dependent decay.
+
+Mamba (S6):  h_t = exp(Δ_t A) h_{t-1} + Δ_t B_t x_t ;  y_t = C_tᵀ h_t + D x_t
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import init_group_norm, init_linear, group_norm, linear
+
+__all__ = ["init_rwkv_time_mix", "rwkv_time_mix", "init_rwkv_channel_mix",
+           "rwkv_channel_mix", "init_mamba", "mamba_fwd", "RWKVState",
+           "MambaState"]
+
+
+class RWKVState(NamedTuple):
+    tm_shift: jax.Array   # [B, D] previous token (time-mix)
+    cm_shift: jax.Array   # [B, D] previous token (channel-mix)
+    s: jax.Array          # [B, H, N, N] wkv state
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array       # [B, d_conv-1, d_inner]
+    h: jax.Array          # [B, d_inner, d_state]
+
+
+def _shift(x: jax.Array, prev: Optional[jax.Array] = None) -> jax.Array:
+    """Token shift: x[t] → x[t-1]; first position uses ``prev`` (or 0)."""
+    pad = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+# ===========================================================================
+# RWKV-6 time mix
+# ===========================================================================
+
+def init_rwkv_time_mix(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    n = cfg.rwkv_head_size
+    h = d // n
+    r = cfg.rwkv_lora_rank
+    ks = jax.random.split(key, 8)
+    return {
+        "mu_x": jnp.full((d,), 0.5, dtype),
+        "maa": jnp.full((5, d), 0.5, dtype),           # w,k,v,r,g mixes
+        "tm_w1": (jax.random.normal(ks[0], (d, 5 * r)) * 1e-2).astype(dtype),
+        "tm_w2": (jax.random.normal(ks[1], (5, r, d)) * 1e-2).astype(dtype),
+        "w0": jnp.full((d,), -2.0, jnp.float32),       # decay bias
+        "td_w1": (jax.random.normal(ks[2], (d, r)) * 1e-2).astype(dtype),
+        "td_w2": (jax.random.normal(ks[3], (r, d)) * 1e-2).astype(dtype),
+        "u": (jax.random.normal(ks[4], (h, n)) * 0.1).astype(jnp.float32),
+        "wr": init_linear(ks[5], d, d, dtype=dtype),
+        "wk": init_linear(ks[6], d, d, dtype=dtype),
+        "wv": init_linear(ks[7], d, d, dtype=dtype),
+        "wg": init_linear(jax.random.fold_in(key, 9), d, d, dtype=dtype),
+        "wo": init_linear(jax.random.fold_in(key, 10), d, d, dtype=dtype),
+        "ln_x": init_group_norm(h, d, dtype),
+    }
+
+
+def _rwkv_project(p: dict, x: jax.Array, shifted: jax.Array,
+                  cfg: ModelConfig):
+    """Data-dependent token-shift interpolation (ddlerp) + projections."""
+    b, t, d = x.shape
+    n = cfg.rwkv_head_size
+    h = d // n
+    xx = shifted - x
+    xxx = x + xx * p["mu_x"]
+    k5 = jnp.tanh(xxx @ p["tm_w1"]).reshape(b, t, 5, -1)
+    offs = jnp.einsum("btfr,frd->btfd", k5, p["tm_w2"])
+    mixed = x[:, :, None] + xx[:, :, None] * (p["maa"] + offs)  # [B,T,5,D]
+    xw, xk, xv, xr, xg = [mixed[:, :, i] for i in range(5)]
+    # decay in fp32: w = exp(-exp(w0 + lora)), in (0, 1)
+    dlt = jnp.tanh(xw @ p["td_w1"]) @ p["td_w2"]
+    logw = -jnp.exp(p["w0"] + dlt.astype(jnp.float32))           # [B,T,D] ≤ 0
+    w = jnp.exp(logw)
+    r = linear(p["wr"], xr).reshape(b, t, h, n)
+    k = linear(p["wk"], xk).reshape(b, t, h, n)
+    v = linear(p["wv"], xv).reshape(b, t, h, n)
+    g = jax.nn.silu(linear(p["wg"], xg))
+    return r, k, v, g, w.reshape(b, t, h, n)
+
+
+def _wkv_chunk(r, k, v, w, u, s0):
+    """One chunk of the WKV recurrence via associative scan.
+
+    r,k,v,w: [B, c, H, N] (w = decay in (0,1), fp32); u: [H, N];
+    s0: [B, H, N, N].  Returns (y [B, c, H, N], s_end)."""
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    outer = jnp.einsum("bchk,bchv->bchkv", kf, vf)      # k ⊗ v per step
+
+    def combine(a, b_):
+        w1, s1 = a
+        w2, s2 = b_
+        return w1 * w2, w2[..., None] * s1 + s2
+
+    w_cum, s_inc = jax.lax.associative_scan(combine, (wf, outer), axis=1)
+    # state BEFORE step t: decayed s0 plus inclusive prefix up to t-1
+    w_excl = jnp.concatenate([jnp.ones_like(w_cum[:, :1]),
+                              w_cum[:, :-1]], axis=1)
+    s_prev = (w_excl[..., None] * s0[:, None]
+              + jnp.concatenate([jnp.zeros_like(s_inc[:, :1]),
+                                 s_inc[:, :-1]], axis=1))
+    y = jnp.einsum("bchk,bchkv->bchv", rf, s_prev)
+    y = y + jnp.einsum("bchk,hk,bchk,bchv->bchv", rf, u, kf, vf)
+    s_end = w_cum[:, -1][..., None] * s0 + s_inc[:, -1]
+    return y, s_end
+
+
+def rwkv_time_mix(p: dict, x: jax.Array, cfg: ModelConfig,
+                  state: Optional[tuple] = None):
+    """Train/prefill path.  state=(shift_prev [B,D], s0 [B,H,N,N]) or None.
+    Returns (y [B,T,D], (last_x, s_end))."""
+    b, t, d = x.shape
+    n = cfg.rwkv_head_size
+    h = d // n
+    prev_x = state[0] if state is not None else None
+    s0 = state[1] if state is not None else jnp.zeros((b, h, n, n),
+                                                      jnp.float32)
+    r, k, v, g, w = _rwkv_project(p, x, _shift(x, prev_x), cfg)
+
+    c = min(cfg.ssm_chunk, t)
+    pad = (-t) % c
+    if pad:
+        # pad with decay-1 / zero-input steps (no-ops for the recurrence)
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zpad(r), zpad(k), zpad(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    t_pad = t + pad
+    nchunks = t_pad // c
+
+    def body(s, inp):
+        rc, kc, vc, wc = inp
+        y, s_next = _wkv_chunk(rc, kc, vc, wc, p["u"], s)
+        return s_next, y
+
+    resh = lambda a: a.reshape(b, nchunks, c, h, n).swapaxes(0, 1)
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    s_end, ys = jax.lax.scan(body_fn, s0,
+                             (resh(r), resh(k), resh(v), resh(w)),
+                             unroll=cfg.unroll_scans)
+    y = ys.swapaxes(0, 1).reshape(b, t_pad, d)[:, :t]
+    h_groups = d // n
+    y = group_norm(p["ln_x"], y.astype(x.dtype), h_groups, cfg.norm_eps) * g
+    y = linear(p["wo"], y)
+    return y, (x[:, -1], s_end)
+
+
+def rwkv_time_mix_decode(p: dict, x: jax.Array, cfg: ModelConfig,
+                         state: tuple):
+    """One-token decode.  x: [B, 1, D]."""
+    b, _, d = x.shape
+    n = cfg.rwkv_head_size
+    h = d // n
+    prev_x, s = state
+    r, k, v, g, w = _rwkv_project(p, x, prev_x[:, None], cfg)
+    rf, kf, vf, wf = (a[:, 0].astype(jnp.float32) for a in (r, k, v, w))
+    kv = jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    y = jnp.einsum("bhk,bhkv->bhv", rf, s + p["u"][None, :, :, None] * kv)
+    s = wf[..., None] * s + kv
+    y = y.reshape(b, 1, d)
+    y = group_norm(p["ln_x"], y.astype(x.dtype), h, cfg.norm_eps) * g
+    return linear(p["wo"], y), (x[:, -1], s)
+
+
+# ===========================================================================
+# RWKV-6 channel mix
+# ===========================================================================
+
+def init_rwkv_channel_mix(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"mu_k": jnp.full((d,), 0.5, dtype),
+            "mu_r": jnp.full((d,), 0.5, dtype),
+            "wk": init_linear(k1, d, f, dtype=dtype),
+            "wv": init_linear(k2, f, d, dtype=dtype),
+            "wr": init_linear(k3, d, d, dtype=dtype)}
+
+
+def rwkv_channel_mix(p: dict, x: jax.Array, cfg: ModelConfig,
+                     prev_x: Optional[jax.Array] = None):
+    xx = _shift(x, prev_x) - x
+    xk = x + xx * p["mu_k"]
+    xr = x + xx * p["mu_r"]
+    kk = jnp.square(jax.nn.relu(linear(p["wk"], xk)))
+    return jax.nn.sigmoid(linear(p["wr"], xr)) * linear(p["wv"], kk), x[:, -1]
+
+
+# ===========================================================================
+# Mamba (S6)
+# ===========================================================================
+
+def init_mamba(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    di = cfg.mamba_d_inner
+    ds = cfg.mamba_d_state
+    dtr = cfg.resolved_dt_rank
+    ks = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "in_proj": init_linear(ks[0], d, 2 * di, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.mamba_d_conv, di))
+                   / cfg.mamba_d_conv).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": init_linear(ks[2], di, dtr + 2 * ds, dtype=dtype),
+        "dt_proj": init_linear(ks[3], dtr, di, bias=True, dtype=dtype),
+        "a_log": jnp.log(a),                       # fp32
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": init_linear(ks[4], di, d, dtype=dtype),
+    }
+
+
+def _mamba_scan_chunked(a_t, b_t, h0, chunk: int, remat: bool,
+                        unroll: bool = False):
+    """h_t = a_t * h_{t-1} + b_t over time.  a_t, b_t: [B, T, di, ds]."""
+    b, t, di, ds = a_t.shape
+    c = min(chunk, t)
+    pad = (-t) % c
+    if pad:
+        a_t = jnp.pad(a_t, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                      constant_values=1.0)   # decay 1 = identity step
+        b_t = jnp.pad(b_t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    t_pad = t + pad
+    nchunks = t_pad // c
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h, inp):
+        ac, bc = inp
+        a_cum, b_cum = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        hs = a_cum * h[:, None] + b_cum
+        return hs[:, -1], hs
+
+    body_fn = jax.checkpoint(body) if remat else body
+    resh = lambda z: z.reshape(b, nchunks, c, di, ds).swapaxes(0, 1)
+    h_end, hs = jax.lax.scan(body_fn, h0, (resh(a_t), resh(b_t)),
+                             unroll=unroll)
+    return hs.swapaxes(0, 1).reshape(b, t_pad, di, ds)[:, :t], h_end
+
+
+def mamba_fwd(p: dict, x: jax.Array, cfg: ModelConfig,
+              state: Optional[MambaState] = None):
+    """Train/prefill.  x: [B, T, D] → (y, MambaState)."""
+    b, t, _ = x.shape
+    di = cfg.mamba_d_inner
+    ds = cfg.mamba_d_state
+    dtr = cfg.resolved_dt_rank
+    dc = cfg.mamba_d_conv
+    xz = linear(p["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    # depthwise causal conv1d over time
+    prev = (state.conv if state is not None
+            else jnp.zeros((b, dc - 1, di), xi.dtype))
+    xpad = jnp.concatenate([prev, xi], axis=1)
+    conv_state = xpad[:, -(dc - 1):] if dc > 1 else prev
+    xc = sum(xpad[:, i:i + t] * p["conv_w"][i] for i in range(dc))
+    xc = jax.nn.silu(xc + p["conv_b"])
+    # input-dependent Δ, B, C
+    proj = linear(p["x_proj"], xc)
+    dt = jax.nn.softplus(linear(p["dt_proj"], proj[..., :dtr])
+                         .astype(jnp.float32))            # [B,T,di]
+    bmat = proj[..., dtr:dtr + ds].astype(jnp.float32)    # [B,T,ds]
+    cmat = proj[..., dtr + ds:].astype(jnp.float32)       # [B,T,ds]
+    a = -jnp.exp(p["a_log"])                              # [di,ds]
+    a_t = jnp.exp(dt[..., None] * a)                      # [B,T,di,ds]
+    b_t = (dt * xc.astype(jnp.float32))[..., None] * bmat[:, :, None]
+    h0 = state.h if state is not None else jnp.zeros((b, di, ds),
+                                                     jnp.float32)
+    hs, h_end = _mamba_scan_chunked(a_t, b_t, h0, cfg.ssm_chunk,
+                                    cfg.remat, cfg.unroll_scans)
+    y = jnp.einsum("btds,bts->btd", hs, cmat)
+    y = (y + xc.astype(jnp.float32) * p["d_skip"]).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return linear(p["out_proj"], y), MambaState(conv=conv_state, h=h_end)
+
+
+def mamba_decode(p: dict, x: jax.Array, cfg: ModelConfig,
+                 state: MambaState):
+    """One-token decode; x: [B, 1, D]."""
+    b = x.shape[0]
+    di, ds, dtr, dc = (cfg.mamba_d_inner, cfg.mamba_d_state,
+                       cfg.resolved_dt_rank, cfg.mamba_d_conv)
+    xz = linear(p["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)               # [B,1,di]
+    xfull = jnp.concatenate([state.conv, xi], axis=1)   # [B,dc,di]
+    xc = jax.nn.silu(jnp.einsum("bcd,cd->bd", xfull, p["conv_w"])
+                     + p["conv_b"])[:, None]
+    proj = linear(p["x_proj"], xc)
+    dt = jax.nn.softplus(linear(p["dt_proj"], proj[..., :dtr])
+                         .astype(jnp.float32))[:, 0]       # [B,di]
+    bmat = proj[:, 0, dtr:dtr + ds].astype(jnp.float32)    # [B,ds]
+    cmat = proj[:, 0, dtr + ds:].astype(jnp.float32)
+    a = -jnp.exp(p["a_log"])
+    a_1 = jnp.exp(dt[..., None] * a)                       # [B,di,ds]
+    b_1 = (dt * xc[:, 0].astype(jnp.float32))[..., None] * bmat[:, None]
+    h = a_1 * state.h + b_1
+    y = jnp.einsum("bds,bs->bd", h, cmat)
+    y = (y + xc[:, 0].astype(jnp.float32) * p["d_skip"]).astype(x.dtype)
+    y = (y[:, None] * jax.nn.silu(z))
+    return linear(p["out_proj"], y), MambaState(conv=xfull[:, 1:], h=h)

@@ -1,0 +1,218 @@
+"""Decoder-only transformer trunk (dense / MoE / VLM language model).
+
+The layer stack is homogeneous, so parameters are stacked with a leading
+layer axis (``vmap`` over init) and the forward is a ``lax.scan`` over
+layers — HLO size stays O(1) in depth, which keeps 88-layer × 512-device
+compiles tractable.  ``jax.checkpoint`` on the block body gives per-layer
+rematerialization.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import (KVCache, attention_decode, attention_fwd,
+                        init_attention, init_kv_cache)
+from .layers import (dtype_of, embed, init_embedding, init_linear,
+                     init_mlp, init_rms_norm, linear, mlp, rms_norm)
+from .moe import MoEStats, init_moe, moe_fwd
+
+__all__ = ["init_lm", "lm_forward", "lm_prefill", "lm_decode_step",
+           "init_lm_cache", "LMOutputs"]
+
+
+class LMOutputs(NamedTuple):
+    logits: jax.Array
+    moe_load: Optional[jax.Array] = None      # [L, E]
+    moe_dropped: Optional[jax.Array] = None   # [L]
+    moe_aux: Optional[jax.Array] = None       # [] load-balance loss
+
+
+def _is_moe(cfg: ModelConfig) -> bool:
+    return cfg.num_experts > 0
+
+
+def _pin(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Keep activations batch-sharded at layer boundaries (under a mesh
+    with a 'data' axis); prevents SPMD replicate-then-reshard round trips
+    at scan/microbatch seams.  MoE trunks additionally shard the hidden dim
+    over 'model' so layer-boundary layouts match the expert-parallel
+    dispatch (avoids reshards around the all-to-all)."""
+    if not cfg.activation_sharding:
+        return x
+    try:
+        from jax.sharding import PartitionSpec as P
+        spec = [None] * x.ndim
+        spec[0] = "data"
+        if cfg.num_experts and x.ndim >= 3 \
+                and cfg.activation_sharding_moe_model:
+            spec[-1] = "model"
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError):
+        return x
+
+
+def _init_block(key, cfg: ModelConfig) -> dict:
+    dt = dtype_of(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": init_rms_norm(cfg.d_model, dt),
+         "attn": init_attention(k1, cfg, dt),
+         "ln2": init_rms_norm(cfg.d_model, dt)}
+    if _is_moe(cfg):
+        p["moe"] = init_moe(k2, cfg, dt)
+    else:
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def _block_fwd(p: dict, x: jax.Array, cfg: ModelConfig, positions, mask,
+               return_kv: bool = False):
+    attn_out = attention_fwd(p["attn"], rms_norm(p["ln1"], x, cfg.norm_eps),
+                             cfg, positions, mask, use_flash=cfg.use_flash,
+                             return_kv=return_kv)
+    if return_kv:
+        attn_out, kv = attn_out
+    h = x + attn_out
+    z = rms_norm(p["ln2"], h, cfg.norm_eps)
+    if _is_moe(cfg):
+        y, stats = moe_fwd(p["moe"], z, cfg, use_kernel=cfg.use_flash)
+    else:
+        y = mlp(p["mlp"], z)
+        stats = MoEStats(jnp.zeros((1,), jnp.int32), jnp.float32(0),
+                         jnp.float32(0))
+    out = _pin(h + y, cfg)
+    if return_kv:
+        return out, (stats, kv)
+    return out, stats
+
+
+def _block_decode(p: dict, x: jax.Array, cache: KVCache, pos, cfg):
+    y_attn, new_cache = attention_decode(
+        p["attn"], rms_norm(p["ln1"], x, cfg.norm_eps), cache, pos, cfg)
+    h = x + y_attn
+    z = rms_norm(p["ln2"], h, cfg.norm_eps)
+    if _is_moe(cfg):
+        y, _ = moe_fwd(p["moe"], z, cfg)
+    else:
+        y = mlp(p["mlp"], z)
+    return h + y, new_cache
+
+
+def init_lm(key, cfg: ModelConfig) -> dict:
+    dt = dtype_of(cfg)
+    ke, kl, kh, kp = jax.random.split(key, 4)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+    params = {
+        "embed": init_embedding(ke, cfg.vocab_size, cfg.d_model, dt),
+        "blocks": jax.vmap(lambda k: _init_block(k, cfg))(layer_keys),
+        "ln_f": init_rms_norm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_linear(kh, cfg.d_model, cfg.vocab_size,
+                                        dtype=dt)
+    if cfg.vision_embed_dim:
+        # 2-layer projector: vision hidden → d_model (InternVL-style)
+        k1, k2 = jax.random.split(kp)
+        params["vis_proj"] = {
+            "fc1": init_linear(k1, cfg.vision_embed_dim, cfg.d_model,
+                               dtype=dt),
+            "fc2": init_linear(k2, cfg.d_model, cfg.d_model, dtype=dt),
+        }
+    return params
+
+
+def _embed_inputs(params: dict, batch: dict, cfg: ModelConfig):
+    """Token (+ optional image) embeddings → [B, S, D]."""
+    x = embed(params["embed"], batch["tokens"], cfg.onehot_embed)
+    if cfg.vision_embed_dim and "image_embeds" in batch:
+        vp = params["vis_proj"]
+        img = linear(vp["fc2"], jax.nn.gelu(
+            linear(vp["fc1"], batch["image_embeds"].astype(x.dtype))))
+        x = jnp.concatenate([img, x], axis=1)   # image tokens prefixed
+    return x
+
+
+def _unembed(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return x @ params["embed"]["table"].T
+    return linear(params["lm_head"], x)
+
+
+def lm_forward(params: dict, batch: dict, cfg: ModelConfig) -> LMOutputs:
+    """Training forward over the full sequence."""
+    x = _pin(_embed_inputs(params, batch, cfg), cfg)
+    s = x.shape[1]
+    positions = jnp.arange(s)[None, :]
+
+    def body(h, pl):
+        y, stats = _block_fwd(pl, h, cfg, positions, None)
+        return y, stats
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, stats = jax.lax.scan(body_fn, x, params["blocks"],
+                            unroll=cfg.unroll_scans)
+    x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+    logits = _unembed(params, x, cfg)
+    if _is_moe(cfg):
+        return LMOutputs(logits, stats.load, stats.dropped_mass,
+                         stats.aux_loss.mean())
+    return LMOutputs(logits)
+
+
+def init_lm_cache(cfg: ModelConfig, batch: int, s_max: int) -> KVCache:
+    one = init_kv_cache(cfg, batch, s_max, dtype_of(cfg))
+    stack = lambda a: jnp.broadcast_to(a[None],
+                                       (cfg.num_layers,) + a.shape).copy()
+    return KVCache(stack(one.k), stack(one.v))
+
+
+def lm_prefill(params: dict, batch: dict, cfg: ModelConfig,
+               s_max: Optional[int] = None):
+    """Run the prompt, return (last-position logits, filled cache)."""
+    x = _embed_inputs(params, batch, cfg)
+    b, s, _ = x.shape
+    s_max = s_max or s
+    positions = jnp.arange(s)[None, :]
+
+    def body(h, pl):
+        y, (_, kv) = _block_fwd(pl, h, cfg, positions, None, return_kv=True)
+        return y, kv
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, (ks, vs) = jax.lax.scan(body_fn, x, params["blocks"],
+                               unroll=cfg.unroll_scans)
+    x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+    logits = _unembed(params, x[:, -1:], cfg)
+    # Place the prompt K/V tail into a cache of capacity s_max; ring-align
+    # so that position p sits at slot p % s_max (what decode expects).
+    cache = init_lm_cache(cfg, b, s_max)
+    cap = cache.k.shape[2]
+    w = min(s, cap)
+    tail_k, tail_v = ks[:, :, s - w:s], vs[:, :, s - w:s]
+    if w == cap and s % cap:
+        tail_k = jnp.roll(tail_k, s % cap, axis=2)
+        tail_v = jnp.roll(tail_v, s % cap, axis=2)
+    cache = KVCache(
+        jax.lax.dynamic_update_slice_in_dim(cache.k, tail_k, 0, 2),
+        jax.lax.dynamic_update_slice_in_dim(cache.v, tail_v, 0, 2))
+    return logits, cache
+
+
+def lm_decode_step(params: dict, token: jax.Array, cache: KVCache,
+                   pos: jax.Array, cfg: ModelConfig):
+    """token: [B, 1] int32; pos: [] position index.  Returns
+    (logits [B,1,V], new cache)."""
+    x = embed(params["embed"], token, cfg.onehot_embed)
+
+    def body(h, layer):
+        pl, cache_l = layer
+        y, new_c = _block_decode(pl, h, cache_l, pos, cfg)
+        return y, new_c
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache),
+                                unroll=cfg.unroll_scans)
+    x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+    return _unembed(params, x, cfg), new_cache

@@ -1,0 +1,6 @@
+from .fault_tolerance import (HeartbeatMonitor, SimulatedFailure,
+                              StragglerDetector, TrainSupervisor)
+from .elastic import propose_mesh_shape, reshard_plan
+
+__all__ = ["HeartbeatMonitor", "StragglerDetector", "TrainSupervisor",
+           "SimulatedFailure", "propose_mesh_shape", "reshard_plan"]

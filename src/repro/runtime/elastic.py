@@ -1,0 +1,58 @@
+"""Elastic scaling: recompute the mesh when the chip count changes and
+describe the resharding.
+
+With checkpoint-mediated restarts (our recovery path) resharding is simply
+"restore onto the new mesh's shardings" — `reshard_plan` reports what moves
+so operators can reason about restart cost.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+__all__ = ["propose_mesh_shape", "reshard_plan"]
+
+
+def propose_mesh_shape(num_chips: int, *, model_parallel: int = 16,
+                       chips_per_pod: int = 256) -> Tuple[Tuple[int, ...],
+                                                          Tuple[str, ...]]:
+    """Pick (pod, data, model) for an arbitrary healthy-chip count.
+
+    Keeps the model axis fixed (parameter layout stability), fills pods of
+    ``chips_per_pod``, and gives the remainder to the data axis — dropping
+    chips that do not fit a whole data-parallel replica group.
+    """
+    if num_chips < model_parallel:
+        raise ValueError("fewer chips than the model-parallel degree")
+    # nearest pod count (a pod that lost hosts shrinks its data axis
+    # rather than being dropped whole)
+    pods = max(1, round(num_chips / chips_per_pod))
+    per_pod = min(num_chips // pods, chips_per_pod)
+    data = per_pod // model_parallel
+    if data < 1:
+        raise ValueError("pod too small for the model-parallel degree")
+    if pods > 1:
+        return (pods, data, model_parallel), ("pod", "data", "model")
+    return (data, model_parallel), ("data", "model")
+
+
+def reshard_plan(old_shape: Dict[str, int],
+                 new_shape: Dict[str, int]) -> Dict[str, str]:
+    """Human-readable description of what a restore-reshard will do."""
+    plan = {}
+    old_dp = old_shape.get("pod", 1) * old_shape.get("data", 1)
+    new_dp = new_shape.get("pod", 1) * new_shape.get("data", 1)
+    if old_shape.get("model") != new_shape.get("model"):
+        plan["params"] = (f"model axis {old_shape.get('model')} → "
+                          f"{new_shape.get('model')}: every TP shard "
+                          "re-split on restore")
+    else:
+        plan["params"] = "model axis unchanged: shards restore in place"
+    if old_dp != new_dp:
+        plan["optimizer"] = (f"ZeRO data shards {old_dp} → {new_dp}: "
+                             "moment tree re-split on restore")
+        plan["data"] = (f"global batch re-sharded {old_dp} → {new_dp} "
+                        "hosts; pipeline state replays deterministically")
+    else:
+        plan["optimizer"] = "data axis unchanged"
+        plan["data"] = "data sharding unchanged"
+    return plan

@@ -1,0 +1,135 @@
+"""Slot-based continuous-batching serving engine.
+
+The strategy scheduler (``core/device/request_scheduler``) decides *what*
+runs each step — admission by priority, dead-request eviction, merged
+("spawn-to-call") prefills; this engine executes the plan against the model:
+
+* a fixed pool of ``max_batch`` decode slots with a shared stacked cache,
+* per-request prefill (the merged chunk runs back-to-back before insertion),
+* one decode step advances every occupied slot.
+
+Works with any family whose cache pytree carries the batch on a fixed axis
+(dense/MoE/VLM: axis 1 of [L, B, S, ...]; RWKV: axis 1).  CPU-runnable with
+reduced configs — that is how the examples and tests drive it.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.device.request_scheduler import (BatchPlan, ContinuousBatcher,
+                                             Request, RequestState)
+from ..models.model_zoo import Model
+
+__all__ = ["ServingEngine"]
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, *, max_batch: int = 4,
+                 s_max: int = 128, prefill_token_budget: int = 512,
+                 batch_axis: int = 1, eos_token: Optional[int] = None):
+        self.model = model
+        self.params = params
+        self.s_max = s_max
+        self.batch_axis = batch_axis
+        self.eos = eos_token
+        self.batcher = ContinuousBatcher(
+            max_batch=max_batch, prefill_token_budget=prefill_token_budget)
+        self.cache = model.init_cache(max_batch, s_max)
+        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self.slot_pos = np.zeros(max_batch, np.int64)
+        self.last_token = jnp.zeros((max_batch, 1), jnp.int32)
+        self.outputs: Dict[int, List[int]] = {}
+        self.prompts: Dict[int, np.ndarray] = {}
+        self._decode = jax.jit(model.decode_step)
+        # jit per distinct prompt length (lengths repeat across requests)
+        self._prefill = jax.jit(lambda p, b: model.prefill(p, b, s_max))
+
+    # -- client API ----------------------------------------------------------
+    def submit(self, tokens: np.ndarray, max_new_tokens: int,
+               priority: float = 1.0,
+               deadline: Optional[float] = None) -> Request:
+        req = Request(prompt_len=len(tokens), max_new_tokens=max_new_tokens,
+                      priority=priority, deadline=deadline)
+        self.prompts[req.rid] = np.asarray(tokens, np.int32)
+        self.outputs[req.rid] = []
+        self.batcher.submit(req)
+        return req
+
+    # -- engine loop ----------------------------------------------------------
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                return i
+        return None
+
+    def _insert(self, slot: int, req: Request, cache_one, last_tok,
+                pos: int) -> None:
+        ax = self.batch_axis
+
+        def put(full, one):
+            idx = [slice(None)] * full.ndim
+            idx[ax] = slice(slot, slot + 1)
+            return full.at[tuple(idx)].set(one.astype(full.dtype))
+
+        self.cache = jax.tree.map(put, self.cache, cache_one)
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = pos
+        self.last_token = self.last_token.at[slot, 0].set(last_tok)
+
+    def step(self) -> int:
+        """One engine step: evict, admit+prefill, decode.  Returns the
+        number of active slots stepped."""
+        plan: BatchPlan = self.batcher.plan_step()
+        for req in plan.evicted:
+            for i, r in enumerate(self.slot_req):
+                if r is req:
+                    self.slot_req[i] = None
+        # merged prefill chunk: run each prompt, insert into a free slot
+        for req in plan.prefill:
+            slot = self._free_slot()
+            if slot is None:
+                self.batcher.submit(req)     # no capacity; retry next step
+                continue
+            toks = self.prompts[req.rid][None, :]
+            logits, cache_one = self._prefill(
+                self.params, {"tokens": jnp.asarray(toks)})
+            nxt = int(jnp.argmax(logits[0, -1]))
+            self.outputs[req.rid].append(nxt)
+            self.batcher.complete_prefill([req])
+            req.generated += 1
+            self._insert(slot, req, cache_one, nxt, len(toks[0]))
+        # decode every occupied slot at its OWN position (attention_decode
+        # takes per-sequence positions — continuous batching mixes depths)
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if active:
+            pos_vec = jnp.asarray(self.slot_pos, jnp.int32)
+            logits, self.cache = self._decode(
+                self.params, self.last_token, self.cache, pos_vec)
+            nxt = jnp.argmax(logits[:, -1], axis=-1)
+            for i in active:
+                req = self.slot_req[i]
+                tok = int(nxt[i])
+                self.outputs[req.rid].append(tok)
+                self.slot_pos[i] += 1
+                self.last_token = self.last_token.at[i, 0].set(tok)
+                self.batcher.complete_decode([req])
+                if (self.eos is not None and tok == self.eos) or \
+                        req.generated >= req.max_new_tokens:
+                    req.state = RequestState.DONE
+                    req.finished_at = time.monotonic()
+                    self.slot_req[i] = None
+        return len(active)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        for _ in range(max_steps):
+            self.step()
+            busy = any(r is not None for r in self.slot_req)
+            if not busy and self.batcher.waiting_count == 0 \
+                    and not self.batcher.running:
+                break
+        return self.outputs

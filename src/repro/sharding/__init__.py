@@ -1,0 +1,4 @@
+from .partition import (batch_spec, param_shardings, param_specs,
+                        spec_for_path)
+
+__all__ = ["param_specs", "param_shardings", "batch_spec", "spec_for_path"]

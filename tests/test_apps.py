@@ -1,0 +1,100 @@
+"""Paper application kernels: correctness + strategy effects."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.apps import (bipartition, prefix_sum, quicksort, sssp, tristrip,
+                        uts)
+
+
+def _brute_force_cut(w, size_a):
+    n = w.shape[0]
+    best = np.inf
+    for comb in itertools.combinations(range(n), size_a):
+        in_a = np.zeros(n, bool)
+        in_a[list(comb)] = True
+        best = min(best, w[np.ix_(in_a, ~in_a)].sum())
+    return int(best)
+
+
+@pytest.mark.parametrize("scheduler", ["strategy", "deque"])
+def test_bipartition_optimal(scheduler):
+    n = 10
+    w = bipartition.random_graph(n, 0.6, max_weight=10, seed=3)
+    res = bipartition.run_bipartition(n=n, density=0.6, max_weight=10,
+                                      seed=3, num_places=2,
+                                      scheduler=scheduler)
+    assert res["cut"] == _brute_force_cut(w, n // 2)
+
+
+def test_bipartition_dead_tasks_and_conversion():
+    res = bipartition.run_bipartition(n=16, density=0.5, num_places=4)
+    assert res["calls_converted"] > 0
+    assert res["explored"] > 0
+
+
+def test_prefix_sum_one_pass_sequential():
+    """1 place → every block resolved in a single pass (the paper's
+    sequential-adaptivity claim)."""
+    res = prefix_sum.run_prefix_sum(n=200_000, num_places=1)
+    assert res["one_pass_fraction"] == 1.0
+
+
+def test_prefix_sum_parallel_correct():
+    res = prefix_sum.run_prefix_sum(n=300_000, num_places=4)
+    assert 0.0 <= res["one_pass_fraction"] <= 1.0
+
+
+def test_prefix_sum_concurrent_composition():
+    res = prefix_sum.run_concurrent_prefix_sums(k=4, n=50_000, num_places=4)
+    assert res["one_pass_fraction"] > 0.0
+
+
+def test_uts_deterministic_count():
+    size = uts.uts_tree_size(3.0, 9)
+    for scheduler in ("strategy", "deque"):
+        res = uts.run_uts(b0=3.0, max_depth=9, num_places=4,
+                          scheduler=scheduler)
+        assert res["nodes"] == size
+
+
+def test_uts_spawn_to_call_cuts_churn():
+    a = uts.run_uts(b0=4.0, max_depth=10, num_places=4,
+                    scheduler="strategy")
+    b = uts.run_uts(b0=4.0, max_depth=10, num_places=4, scheduler="deque")
+    assert a["nodes"] == b["nodes"]
+    assert a["queue_churn"] < 0.6 * b["queue_churn"]
+
+
+def test_sssp_matches_dijkstra():
+    res = sssp.run_sssp(n=400, density=0.05, num_places=4)
+    # priority strategy keeps the work close to sequential Dijkstra's
+    assert res["work_ratio"] < 1.5
+    assert res["dead_pruned"] >= 0
+
+
+def test_quicksort_sorts():
+    for scheduler in ("strategy", "deque"):
+        res = quicksort.run_quicksort(n=200_000, num_places=4,
+                                      scheduler=scheduler)
+        assert res["time_s"] > 0
+
+
+def test_quicksort_weighted_steals():
+    res = quicksort.run_quicksort(n=500_000, num_places=4)
+    if res["steals"]:
+        # half-the-work stealing moves far more weight than task count
+        assert res["weight_stolen"] > res["tasks_stolen"]
+
+
+def test_tristrip_covers_all_triangles():
+    res = tristrip.run_tristrip(rows=24, cols=24, num_places=4)
+    assert res["num_strips"] >= 1
+    assert res["avg_strip_len"] * res["num_strips"] == \
+        pytest.approx(res["num_triangles"])
+
+
+def test_tristrip_composition_metrics():
+    res = tristrip.run_tristrip(rows=32, cols=32, num_places=4)
+    assert res["calls_converted"] > 0   # StartTasks converted to calls

@@ -1,0 +1,189 @@
+"""Core strategy scheduler behaviour."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (BaseStrategy, DepthFirstStrategy, FifoStrategy,
+                        PriorityStrategy, SchedulerConfig, StrategyScheduler,
+                        WorkStealingScheduler, finish, get_place, spawn,
+                        spawn_s)
+from repro.core.task import FinishRegion, Task, TaskState
+from repro.core.task_storage import StrategyTaskStorage
+
+
+def _fib(n, out, i):
+    if n < 2:
+        out[i] = n
+        return
+    sub = [0, 0]
+    with finish():
+        spawn(_fib, n - 1, sub, 0)
+        spawn(_fib, n - 2, sub, 1)
+    out[i] = sub[0] + sub[1]
+
+
+@pytest.mark.parametrize("sched_cls", [StrategyScheduler,
+                                       WorkStealingScheduler])
+def test_fib_correct(sched_cls):
+    sched = sched_cls(num_places=4)
+    out = [0]
+    sched.run(_fib, 14, out, 0)
+    assert out[0] == 377
+    m = sched.metrics.snapshot()
+    assert m["tasks_executed"] == m["spawns"]
+
+
+def test_result_returned():
+    sched = StrategyScheduler(num_places=2)
+    assert sched.run(lambda: 42) == 42
+
+
+def test_exception_propagates():
+    sched = StrategyScheduler(num_places=2)
+
+    def boom():
+        raise ValueError("boom")
+
+    with pytest.raises(ValueError, match="boom"):
+        sched.run(boom)
+
+
+def test_call_conversion_reduces_spawns():
+    def tree(depth, max_depth):
+        if depth >= max_depth:
+            return
+        for _ in range(2):
+            spawn_s(DepthFirstStrategy(depth, max_depth), tree, depth + 1,
+                    max_depth)
+
+    results = {}
+    for conv in (True, False):
+        sched = StrategyScheduler(
+            num_places=2, config=SchedulerConfig(call_conversion=conv))
+        sched.run(tree, 0, 10)
+        results[conv] = sched.metrics.snapshot()
+    total_with = results[True]["spawns"] + results[True]["calls_converted"]
+    total_without = results[False]["spawns"]
+    assert total_with == total_without          # same work
+    assert results[True]["calls_converted"] > 0
+    assert results[True]["spawns"] < results[False]["spawns"]
+
+
+def test_dead_tasks_pruned():
+    killed = {"flag": False}
+
+    class Dying(BaseStrategy):
+        def is_dead(self):
+            return killed["flag"]
+
+    executed = []
+
+    def victim(i):
+        executed.append(i)
+
+    def root():
+        killed["flag"] = False
+        with finish():
+            for i in range(50):
+                spawn_s(Dying(), victim, i)
+            killed["flag"] = True  # everything queued is now dead
+
+    sched = StrategyScheduler(num_places=1)
+    sched.run(root)
+    m = sched.metrics.snapshot()
+    assert m["dead_pruned"] > 0
+    assert len(executed) + m["dead_pruned"] == 50
+
+
+def test_priority_local_order():
+    """With one place, PriorityStrategy tasks run best-first."""
+    order = []
+
+    def record(i):
+        order.append(i)
+
+    def root():
+        with finish():
+            for i in [5, 3, 8, 1, 9, 2]:
+                spawn_s(PriorityStrategy(priority=i), record, i)
+
+    sched = StrategyScheduler(num_places=1)
+    sched.run(root)
+    assert order == sorted(order)
+
+
+def test_steal_half_work_takes_heavy_task():
+    """A single heavy task should satisfy the half-work rule."""
+    storage = StrategyTaskStorage(place_id=0)
+    region = FinishRegion()
+
+    def mk(weight):
+        s = BaseStrategy(transitive_weight=weight, place=0)
+        region.inc()
+        t = Task(lambda: None, (), {}, s, region)
+        storage.push(t)
+        return t
+
+    heavy = mk(100)
+    for _ in range(10):
+        mk(1)
+    stolen, weight = storage.steal_batch(stealer_id=1, half_work=True)
+    assert heavy in stolen
+    assert weight >= storage.ready_weight  # at least half of original 110
+    assert len(stolen) <= 2
+
+
+def test_steal_order_fifo_for_base_strategy():
+    storage = StrategyTaskStorage(place_id=0)
+    region = FinishRegion()
+    tasks = []
+    for i in range(6):
+        s = BaseStrategy(place=0)
+        region.inc()
+        t = Task(lambda: None, (), {}, s, region)
+        storage.push(t)
+        tasks.append(t)
+    stolen, _ = storage.steal_batch(stealer_id=1, half_work=False)
+    # FIFO: the oldest tasks leave first
+    assert stolen == tasks[:len(stolen)]
+
+
+def test_lazy_steal_view_updates_with_new_pushes():
+    storage = StrategyTaskStorage(place_id=0)
+    region = FinishRegion()
+
+    def push(prio):
+        region.inc()
+        t = Task(lambda: None, (), {}, PriorityStrategy(priority=prio,
+                                                        place=0), region)
+        storage.push(t)
+        return t
+
+    push(5)
+    storage.steal_batch(stealer_id=1, half_work=False)  # view created
+    best = push(0)                                       # better task later
+    stolen, _ = storage.steal_batch(stealer_id=1, half_work=False)
+    assert best in stolen                                # view was refreshed
+
+
+def test_get_place_inside_tasks():
+    seen = set()
+
+    def root():
+        with finish():
+            for _ in range(20):
+                spawn(lambda: seen.add(get_place()))
+
+    sched = StrategyScheduler(num_places=3)
+    sched.run(root)
+    assert seen.issubset({0, 1, 2})
+
+
+def test_nearest_first_victim_order():
+    from repro.core import pod_machine
+    m = pod_machine(2, 4)
+    order = m.victims_by_distance(0)
+    assert set(order[:3]) == {1, 2, 3}          # same pod first
+    assert set(order[3:]) == {4, 5, 6, 7}
+    assert m.distance(0, 1) < m.distance(0, 4)

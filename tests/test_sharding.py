@@ -1,0 +1,85 @@
+"""Partition-rule behaviour (on a small real mesh — no fake devices in
+tests)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, scale_down
+from repro.models import build_model
+from repro.sharding import batch_spec, param_specs, spec_for_path
+
+
+class _FakeMesh:
+    """Shape-only stand-in so rule tests don't need real devices."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+MESH = _FakeMesh(data=16, model=16)
+MESH_POD = _FakeMesh(pod=2, data=16, model=16)
+
+
+def test_attention_rules():
+    assert spec_for_path("blocks/attn/wq/w", (28, 1536, 1536), MESH) \
+        == P(None, None, "model")
+    assert spec_for_path("blocks/attn/wo/w", (28, 1536, 1536), MESH) \
+        == P(None, "model", None)
+    assert spec_for_path("blocks/attn/wq/b", (28, 1536), MESH) \
+        == P(None, "model")
+
+
+def test_embedding_vocab_sharded():
+    assert spec_for_path("embed/table", (151936, 1536), MESH) \
+        == P("model", None)
+
+
+def test_indivisible_dim_falls_back_to_replication():
+    # 10 heads*hd=1000 not divisible by 16 → replicated, not an error
+    assert spec_for_path("blocks/attn/wq/w", (2, 64, 1000), MESH) \
+        == P(None, None, None)
+
+
+def test_expert_parallel_when_divisible():
+    # kimi: 384 experts % 16 == 0 → experts sharded over model
+    assert spec_for_path("blocks/moe/w_gate", (61, 384, 7168, 2048), MESH) \
+        == P(None, "model", None, None)
+    # mixtral: 8 experts % 16 != 0 → TP inside experts on the wide dim
+    assert spec_for_path("blocks/moe/w_gate", (56, 8, 6144, 16384), MESH) \
+        == P(None, None, None, "model")
+    assert spec_for_path("blocks/moe/w_down", (56, 8, 16384, 6144), MESH) \
+        == P(None, None, "model", None)
+
+
+def test_fsdp_shards_biggest_replicated_dim():
+    spec = spec_for_path("blocks/mlp/gate/w", (88, 12288, 28672), MESH_POD,
+                         fsdp_axes=("pod", "data"))
+    assert spec == P(None, ("pod", "data"), "model")
+
+
+def test_param_specs_cover_whole_tree():
+    cfg = scale_down(get_config("jamba-v0.1-52b"))
+    model = build_model(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    specs = param_specs(params, MESH)
+    n_leaves = len(jax.tree.leaves(params))
+    n_specs = len(jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)))
+    assert n_specs == n_leaves
+
+
+def test_batch_spec_axes():
+    assert batch_spec(MESH) == P("data")
+    assert batch_spec(MESH_POD) == P(("pod", "data"))
+
+
+def test_rwkv_and_mamba_rules():
+    assert spec_for_path("blocks/tm/wr/w", (32, 2560, 2560), MESH) \
+        == P(None, None, "model")
+    assert spec_for_path("blocks/tm/wo/w", (32, 2560, 2560), MESH) \
+        == P(None, "model", None)
+    assert spec_for_path("superblocks/layers/1/mamba/in_proj/w",
+                         (4, 4096, 16384), MESH) == P(None, None, "model")
+    assert spec_for_path("superblocks/layers/1/mamba/a_log",
+                         (4, 8192, 16), MESH) == P(None, "model", None)

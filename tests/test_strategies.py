@@ -1,0 +1,97 @@
+"""Property tests for strategy composition (the paper's composability
+guarantee: any mix of strategy types yields a well-defined total order)."""
+import random
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BaseStrategy, DepthFirstStrategy, FifoStrategy,
+                        PriorityStrategy, RandomStealStrategy, local_before,
+                        lowest_common_ancestor, steal_before)
+
+
+def _mk_strategy(draw_kind, rng):
+    if draw_kind == "base":
+        return BaseStrategy(place=0)
+    if draw_kind == "fifo":
+        return FifoStrategy(place=0)
+    if draw_kind == "prio":
+        return PriorityStrategy(priority=rng.random(), place=0)
+    if draw_kind == "rand":
+        return RandomStealStrategy(priority=rng.random(),
+                                   steal_key=rng.random(), place=0)
+    return DepthFirstStrategy(rng.randrange(10), 10, place=0)
+
+
+_KINDS = ["base", "fifo", "prio", "rand", "depth"]
+
+
+@given(st.lists(st.sampled_from(_KINDS), min_size=2, max_size=30),
+       st.integers(0, 2**31))
+@settings(max_examples=200, deadline=None)
+def test_order_is_total_and_antisymmetric(kinds, seed):
+    rng = random.Random(seed)
+    items = [_mk_strategy(k, rng) for k in kinds]
+    for cmp in (local_before, steal_before):
+        for a in items:
+            assert not cmp(a, a) or True  # no crash on self-compare
+            for b in items:
+                if a is b:
+                    continue
+                ab, ba = cmp(a, b), cmp(b, a)
+                # well-defined: both orders computable, not both True
+                assert not (ab and ba)
+
+
+@given(st.lists(st.sampled_from(_KINDS), min_size=2, max_size=15),
+       st.integers(0, 2**31))
+@settings(max_examples=100, deadline=None)
+def test_sorting_any_mix_never_crashes(kinds, seed):
+    """The composability claim, operationally: an arbitrary mix of strategy
+    types can be totally ordered (sorted) without error."""
+    import functools
+    rng = random.Random(seed)
+    items = [_mk_strategy(k, rng) for k in kinds]
+
+    def as_cmp(fn):
+        return functools.cmp_to_key(
+            lambda a, b: -1 if fn(a, b) else (1 if fn(b, a) else 0))
+
+    assert len(sorted(items, key=as_cmp(local_before))) == len(items)
+    assert len(sorted(items, key=as_cmp(steal_before))) == len(items)
+
+
+def test_lca_resolution():
+    assert lowest_common_ancestor(FifoStrategy, PriorityStrategy) \
+        is BaseStrategy
+    assert lowest_common_ancestor(RandomStealStrategy, PriorityStrategy) \
+        is PriorityStrategy
+    assert lowest_common_ancestor(PriorityStrategy, PriorityStrategy) \
+        is PriorityStrategy
+
+
+def test_children_overrule_ancestors():
+    """Two RandomStealStrategies compare via their own steal rule (random
+    key), not via the ancestor's priority rule."""
+    a = RandomStealStrategy(priority=0.1, steal_key=0.9, place=0)
+    b = RandomStealStrategy(priority=0.9, steal_key=0.1, place=0)
+    # steal: b has the smaller random key → stolen first, despite worse
+    # priority
+    assert steal_before(b, a)
+    assert not steal_before(a, b)
+    # local: priority wins
+    assert local_before(a, b)
+
+
+def test_lifo_fifo_root_semantics():
+    a = BaseStrategy(place=0)
+    b = BaseStrategy(place=0)   # spawned after a
+    assert local_before(b, a)   # LIFO: newest first locally
+    assert steal_before(a, b)   # FIFO: oldest stolen first
+
+
+def test_mixed_type_comparison_uses_lca():
+    base = BaseStrategy(place=0)
+    prio = PriorityStrategy(priority=0.0, place=0)
+    # LCA is BaseStrategy → LIFO by spawn_seq: prio spawned later → first
+    assert local_before(prio, base)
+    assert steal_before(base, prio)
