@@ -1,0 +1,116 @@
+"""Cluster-scale steal-policy sweep on the discrete-event simulator.
+
+Compares the paper's steal-half-the-*work* against the oblivious
+steal-half-the-*count* and Van Houdt-style share-on-arrival (no stealing,
+least-loaded-of-d placement), under exponential and heavy-tailed (Pareto)
+request-size distributions.  Writes ``BENCH_cluster.json``.
+
+    PYTHONPATH=src python benchmarks/cluster_scale.py --sim \
+        --replicas 1000 --requests 100000 --headline
+
+The headline check: steal-half-work must beat steal-half-count on the
+interactive class's p99 latency under the heavy-tailed workload
+(``--headline`` runs exactly that pair — ~15 s per policy at 1000
+replicas / 100k requests; the default sweep covers all policies × both
+size distributions).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.cluster import StealPolicy, run_cluster_sim  # noqa: E402
+
+POLICIES = {
+    "steal-half-work": StealPolicy(amount="half_work", victim="random",
+                                   placement="round_robin"),
+    "steal-half-count": StealPolicy(amount="half_count", victim="random",
+                                    placement="round_robin"),
+    "share-on-arrival": StealPolicy(amount="none", placement="least_of_d"),
+    "steal-half-work-nearest": StealPolicy(amount="half_work",
+                                           victim="nearest",
+                                           placement="round_robin"),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sim", action="store_true",
+                    help="discrete-event simulation backend (required; the "
+                         "live path is examples/serve_cluster.py)")
+    ap.add_argument("--replicas", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=20000)
+    ap.add_argument("--utilization", type=float, default=0.9)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--pareto-alpha", type=float, default=1.5)
+    ap.add_argument("--dists", default="exponential,pareto")
+    ap.add_argument("--policies", default=",".join(POLICIES))
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--out", default="BENCH_cluster.json")
+    ap.add_argument("--headline", action="store_true",
+                    help="only the heavy-tail half-work vs half-count pair")
+    args = ap.parse_args()
+
+    if args.headline:
+        args.dists = "pareto"
+        args.policies = "steal-half-work,steal-half-count"
+    if not args.sim:
+        ap.error("--sim is required (live multi-replica serving: "
+                 "examples/serve_cluster.py or repro.launch.serve "
+                 "--replicas N)")
+
+    results = {"config": {k: v for k, v in vars(args).items() if k != "out"},
+               "runs": {}}
+    for dist in args.dists.split(","):
+        for name in args.policies.split(","):
+            if name not in POLICIES:
+                ap.error(f"unknown policy {name!r}; choose from "
+                         f"{', '.join(POLICIES)}")
+            pol = POLICIES[name]
+            t0 = time.perf_counter()
+            tel = run_cluster_sim(
+                args.replicas, args.requests, pol,
+                utilization=args.utilization, size_dist=dist,
+                pareto_alpha=args.pareto_alpha, slots=args.slots,
+                seed=args.seed)
+            wall = time.perf_counter() - t0
+            s = tel.summary()
+            s["wall_seconds"] = wall
+            results["runs"][f"{dist}/{name}"] = s
+            inter = tel.class_percentiles(0.0)
+            bulk = tel.class_percentiles(1.0)
+            print(f"{dist:12s} {name:24s} wall={wall:6.1f}s "
+                  f"steals={s['steal_events']:6d} "
+                  f"migrated_w={s['weight_migrated']:9d} "
+                  f"inter_p99={inter.get('p99_s', 0):7.3f}s "
+                  f"bulk_p99={bulk.get('p99_s', 0):7.2f}s",
+                  flush=True)
+
+    runs = results["runs"]
+    hw = runs.get("pareto/steal-half-work")
+    hc = runs.get("pareto/steal-half-count")
+    if hw and hc:
+        p99_w = hw["per_class"]["0.0"]["p99_s"]
+        p99_c = hc["per_class"]["0.0"]["p99_s"]
+        verdict = ("BEATS" if p99_w < p99_c else
+                   "TIES" if p99_w == p99_c else "DOES NOT BEAT")
+        results["headline"] = {
+            "heavy_tail_interactive_p99_half_work": p99_w,
+            "heavy_tail_interactive_p99_half_count": p99_c,
+            "half_work_beats_half_count": bool(p99_w < p99_c),
+        }
+        print(f"\nheavy tail: steal-half-work p99={p99_w:.3f}s {verdict} "
+              f"steal-half-count p99={p99_c:.3f}s")
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

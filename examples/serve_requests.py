@@ -12,6 +12,7 @@ sys.path.insert(0, "src")
 import jax
 import numpy as np
 
+from repro.cluster import ClusterTelemetry
 from repro.configs import get_config, scale_down
 from repro.models import build_model
 from repro.serving import ServingEngine
@@ -45,10 +46,20 @@ if __name__ == "__main__":
     fin_i = max(r.finished_at for r in interactive)
     fin_b = max(r.finished_at for r in batchy)
     m = eng.batcher.metrics
+
+    # per-SLO-class latency percentiles via the cluster telemetry module
+    tel = ClusterTelemetry(num_replicas=1)
+    for r in interactive + batchy:
+        tel.record_finish(r, r.finished_at, replica_id=0)
     print(f"{toks} tokens across {len(outs) - 1} live requests in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s on CPU)")
     print(f"interactive tier drained {fin_b - fin_i:+.2f}s before batch tier"
           f" (strategy priority)")
+    for slo in (0.0, 1.0):
+        c = tel.class_percentiles(slo)
+        print(f"slo={slo:g}: n={c['count']} p50={c['p50_s']*1e3:.0f}ms "
+              f"p90={c['p90_s']*1e3:.0f}ms p99={c['p99_s']*1e3:.0f}ms "
+              f"mean={c['mean_s']*1e3:.0f}ms")
     print(f"merged prefills: {m['merged_prefills']}  "
           f"dead evicted: {m['evicted_dead']}  steps: {m['steps']}")
     assert cancelled.rid not in outs or not outs[cancelled.rid]

@@ -1,0 +1,21 @@
+"""Cluster subsystem: the paper's per-task strategies lifted to replicas.
+
+task ↔ request, place ↔ replica, steal-half-the-work ↔ backlog migration.
+The same :class:`ClusterRouter` policy object drives live ``ServingEngine``
+replicas (``EngineReplica``) and the discrete-event scale simulator
+(``cluster.sim``), so steal/placement strategies are evaluated at thousands
+of replicas before they ever touch hardware.
+"""
+from .replica import EngineReplica, Replica
+from .router import ClusterRouter, StealPolicy
+from .sim import (ClassSpec, ServiceModel, SimClock, SimReplica, Simulation,
+                  default_workload, run_cluster_sim, synthetic_requests)
+from .telemetry import ClusterTelemetry, LatencyHistogram
+
+__all__ = [
+    "Replica", "EngineReplica",
+    "ClusterRouter", "StealPolicy",
+    "SimClock", "ServiceModel", "SimReplica", "Simulation",
+    "ClassSpec", "default_workload", "synthetic_requests", "run_cluster_sim",
+    "ClusterTelemetry", "LatencyHistogram",
+]

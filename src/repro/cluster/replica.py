@@ -1,0 +1,121 @@
+"""Replica interface: the unit the cluster router places work on and steals
+work between.
+
+Paper mapping — a replica is a *place*: it owns a strategy-ordered local
+queue (its ``ContinuousBatcher``), exposes its transitive backlog weight for
+steal-half-the-*work* decisions, and yields waiting requests to thieves.
+``EngineReplica`` wraps a live ``ServingEngine`` (real model on CPU/TPU);
+``cluster.sim.SimReplica`` implements the same interface with modeled
+service times — the router's policy code cannot tell them apart.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Tuple
+
+from ..core.device.request_scheduler import Request
+
+__all__ = ["Replica", "EngineReplica"]
+
+#: a migrated unit: the request plus its prompt tokens (None in simulation)
+StolenItem = Tuple[Request, Optional[Any]]
+
+
+class Replica:
+    """Abstract replica.  ``place`` indexes into the cluster's
+    :class:`~repro.core.machine.MachineModel` for distance-aware victim
+    ordering."""
+
+    def __init__(self, replica_id: int, place: Optional[int] = None):
+        self.replica_id = replica_id
+        self.place = replica_id if place is None else place
+
+    # -- work accounting -----------------------------------------------------
+    def backlog_weight(self) -> int:
+        """Estimated outstanding work (waiting + running), in tokens."""
+        raise NotImplementedError
+
+    def waiting_weight(self) -> int:
+        """Estimated work in the queue — the part a thief can migrate."""
+        raise NotImplementedError
+
+    def waiting_count(self) -> int:
+        raise NotImplementedError
+
+    def active_count(self) -> int:
+        raise NotImplementedError
+
+    def wants_work(self) -> bool:
+        """True when this replica could start another request immediately —
+        the thief condition for the router's steal loop."""
+        raise NotImplementedError
+
+    # -- request flow --------------------------------------------------------
+    def submit(self, req: Request, tokens: Optional[Any] = None) -> None:
+        raise NotImplementedError
+
+    def steal_waiting(self, target_weight: int) -> List[StolenItem]:
+        raise NotImplementedError
+
+    def steal_waiting_count(self, n: int) -> List[StolenItem]:
+        raise NotImplementedError
+
+    def receive(self, stolen: List[StolenItem]) -> None:
+        for req, tokens in stolen:
+            self.submit(req, tokens)
+
+    # -- health --------------------------------------------------------------
+    def health(self) -> dict:
+        return {"replica_id": self.replica_id, "place": self.place,
+                "backlog_weight": self.backlog_weight(),
+                "waiting": self.waiting_count(),
+                "active": self.active_count()}
+
+
+class EngineReplica(Replica):
+    """A live serving replica: one ``ServingEngine`` (model + KV cache +
+    continuous batcher).  Prompt tokens travel with stolen requests."""
+
+    def __init__(self, replica_id: int, engine,
+                 place: Optional[int] = None):
+        super().__init__(replica_id, place)
+        self.engine = engine
+
+    # -- work accounting -----------------------------------------------------
+    def backlog_weight(self) -> int:
+        return self.engine.batcher.backlog_weight()
+
+    def waiting_weight(self) -> int:
+        return self.engine.batcher.waiting_weight()
+
+    def waiting_count(self) -> int:
+        return self.engine.batcher.waiting_count
+
+    def active_count(self) -> int:
+        return sum(1 for r in self.engine.slot_req if r is not None)
+
+    def free_slots(self) -> int:
+        return sum(1 for r in self.engine.slot_req if r is None)
+
+    def wants_work(self) -> bool:
+        return self.waiting_count() == 0 and self.free_slots() > 0
+
+    # -- request flow --------------------------------------------------------
+    def submit(self, req: Request, tokens: Optional[Any] = None) -> None:
+        if tokens is None:
+            raise ValueError("EngineReplica.submit needs prompt tokens")
+        self.engine.submit_request(req, tokens)
+
+    def steal_waiting(self, target_weight: int) -> List[StolenItem]:
+        return self.engine.export_waiting(target_weight=target_weight)
+
+    def steal_waiting_count(self, n: int) -> List[StolenItem]:
+        return self.engine.export_waiting(count=n)
+
+    # -- engine loop ---------------------------------------------------------
+    def step(self) -> int:
+        return self.engine.step()
+
+    def drained(self) -> bool:
+        return (not any(r is not None for r in self.engine.slot_req)
+                and self.engine.batcher.waiting_count == 0
+                and not self.engine.batcher.running)

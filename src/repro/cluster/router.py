@@ -1,0 +1,269 @@
+"""Admission router + configurable cross-replica steal loop.
+
+This generalizes ``rebalance_replicas`` into the paper's configurable-
+strategy shape, lifted from threads-in-a-process to replicas-in-a-cluster:
+
+* **placement** (where an arriving request lands) — round-robin, random,
+  least-loaded-of-d sampled replicas ("share on arrival", Van Houdt's
+  sharing discipline), global least-work, or SLO-aware (tier-0 requests get
+  a global scan, bulk tiers the cheap sampled scan); ties broken by
+  ``MachineModel`` distance from the request's home place (locality).
+* **steal amount** — ``half_work`` (half the victim's backlog by estimated
+  *weight*, largest requests first — the paper's steal-half-the-work) vs
+  ``half_count`` (half the victim's queue oldest-first, the oblivious
+  baseline) vs ``none`` (pure sharing).
+* **victim order** — ``nearest`` (machine-distance order, neighbours
+  first), ``random``, or ``max_loaded`` (global argmax).
+
+The router only talks to the :class:`~repro.cluster.replica.Replica`
+interface, so the identical policy object drives live ``ServingEngine``
+replicas and the discrete-event simulator in ``cluster.sim``.
+"""
+from __future__ import annotations
+
+import itertools
+import random
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence
+
+from ..core.device.request_scheduler import Request, RequestState
+from ..core.machine import MachineModel, flat_machine
+from .replica import Replica
+from .telemetry import ClusterTelemetry
+
+__all__ = ["StealPolicy", "ClusterRouter"]
+
+
+@dataclass(frozen=True)
+class StealPolicy:
+    """Configuration of the cluster-level work-stealing strategy."""
+
+    amount: str = "half_work"        # half_work | half_count | none
+    victim: str = "nearest"          # nearest | random | max_loaded
+    placement: str = "round_robin"   # round_robin | random | least_of_d |
+                                     # least_work | slo_aware
+    probe: int = 4                   # replicas probed per steal / placement
+    min_victim_weight: int = 2       # don't steal from near-empty victims
+
+    def __post_init__(self):
+        if self.amount not in ("half_work", "half_count", "none"):
+            raise ValueError(f"unknown steal amount {self.amount!r}")
+        if self.victim not in ("nearest", "random", "max_loaded"):
+            raise ValueError(f"unknown victim order {self.victim!r}")
+        if self.placement not in ("round_robin", "random", "least_of_d",
+                                  "least_work", "slo_aware"):
+            raise ValueError(f"unknown placement {self.placement!r}")
+
+
+class ClusterRouter:
+    """Places requests and runs the steal loop over a replica pool."""
+
+    def __init__(self, replicas: Sequence[Replica],
+                 machine: Optional[MachineModel] = None,
+                 policy: Optional[StealPolicy] = None,
+                 telemetry: Optional[ClusterTelemetry] = None,
+                 now: Callable[[], float] = time.monotonic,
+                 seed: int = 0):
+        self.replicas = list(replicas)
+        self.machine = machine or flat_machine(len(self.replicas))
+        if self.machine.num_places != len(self.replicas):
+            raise ValueError("machine model size != replica count")
+        self.policy = policy or StealPolicy()
+        self.telemetry = telemetry or ClusterTelemetry(len(self.replicas))
+        self.now = now
+        self.rng = random.Random(seed)
+        self._rr = itertools.cycle(range(len(self.replicas)))
+        self._victims_cache: Dict[int, List[int]] = {}
+        self.outstanding: Dict[int, Request] = {}
+        self._owner: Dict[int, int] = {}        # rid -> replica index
+        self._steps = 0
+
+    # -- placement -----------------------------------------------------------
+    def _sampled(self, k: int) -> List[int]:
+        n = len(self.replicas)
+        return self.rng.sample(range(n), min(k, n))
+
+    def _least_loaded(self, candidates: Sequence[int],
+                      home: Optional[int]) -> int:
+        def key(i: int):
+            dist = (self.machine.distance(home, self.replicas[i].place)
+                    if home is not None else 0)
+            return (self.replicas[i].backlog_weight(), dist, i)
+        return min(candidates, key=key)
+
+    def place(self, req: Request, home: Optional[int] = None) -> int:
+        p = self.policy.placement
+        n = len(self.replicas)
+        if p == "round_robin":
+            return next(self._rr)
+        if p == "random":
+            return self.rng.randrange(n)
+        if p == "least_of_d":
+            return self._least_loaded(self._sampled(self.policy.probe), home)
+        if p == "least_work":
+            return self._least_loaded(range(n), home)
+        # slo_aware: urgent classes pay for the global scan, bulk ones sample
+        if req.priority <= 0.0:
+            return self._least_loaded(range(n), home)
+        return self._least_loaded(self._sampled(self.policy.probe), home)
+
+    def submit(self, req: Request, tokens=None,
+               home: Optional[int] = None) -> int:
+        """Place ``req`` on a replica; returns the replica index."""
+        idx = self.place(req, home)
+        self.replicas[idx].submit(req, tokens)
+        self.outstanding[req.rid] = req
+        self._owner[req.rid] = idx
+        return idx
+
+    # -- steal loop ----------------------------------------------------------
+    def _nearest_order(self, thief_idx: int) -> List[int]:
+        order = self._victims_cache.get(thief_idx)
+        if order is None:
+            thief = self.replicas[thief_idx]
+            order = sorted(
+                (i for i in range(len(self.replicas)) if i != thief_idx),
+                key=lambda i: (self.machine.distance(
+                    thief.place, self.replicas[i].place), i))
+            self._victims_cache[thief_idx] = order
+        return order
+
+    def _victim_order(self, thief_idx: int,
+                      pool: Optional[Sequence[int]] = None) -> List[int]:
+        """Victim candidates for ``thief_idx``, per policy.  ``pool``
+        restricts to replicas known to have queued work (the router is a
+        central coordinator — informed probing is allowed)."""
+        pol = self.policy
+        n = len(self.replicas)
+        if pol.victim == "nearest":
+            base = self._nearest_order(thief_idx)
+            if pool is None:
+                return base[:pol.probe]
+            pooled = set(pool)
+            return [i for i in base if i in pooled][:pol.probe]
+        if pol.victim == "random":
+            if pool is not None:
+                cand = [i for i in pool if i != thief_idx]
+                if len(cand) > pol.probe:
+                    cand = self.rng.sample(cand, pol.probe)
+                return cand
+            # blind probing: rejection-sample a few indices, no O(n) list
+            picked: List[int] = []
+            for _ in range(4 * pol.probe):
+                if len(picked) >= min(pol.probe, n - 1):
+                    break
+                i = self.rng.randrange(n)
+                if i != thief_idx and i not in picked:
+                    picked.append(i)
+            return picked
+        # max_loaded: global argmax (the pool, or everyone)
+        src = pool if pool is not None else range(n)
+        return [i for i in src if i != thief_idx]
+
+    def steal_for(self, thief_idx: int,
+                  pool: Optional[Sequence[int]] = None) -> int:
+        """One steal attempt on behalf of an idle replica.  Returns the
+        number of requests migrated."""
+        pol = self.policy
+        if pol.amount == "none":
+            return 0
+        candidates = self._victim_order(thief_idx, pool)
+        if not candidates:
+            return 0
+        # rank by STEALABLE work: running requests cannot migrate, so a
+        # backlog-heavy but queue-empty replica is not a victim
+        victim_idx = max(candidates,
+                         key=lambda i: self.replicas[i].waiting_weight())
+        victim = self.replicas[victim_idx]
+        if victim.waiting_count() == 0 or \
+                victim.waiting_weight() < pol.min_victim_weight:
+            return 0
+        if pol.amount == "half_work":
+            stolen = victim.steal_waiting(victim.waiting_weight() // 2)
+        else:
+            stolen = victim.steal_waiting_count(victim.waiting_count() // 2)
+        if not stolen:
+            return 0
+        thief = self.replicas[thief_idx]
+        thief.receive(stolen)
+        weight = 0
+        for r, _ in stolen:
+            weight += r.est_remaining_work
+            self._owner[r.rid] = thief_idx
+        self.telemetry.record_steal(victim_idx, thief_idx,
+                                    len(stolen), weight)
+        return len(stolen)
+
+    def steal_tick(self) -> int:
+        """Every replica that wants work attempts one steal — the cluster
+        analogue of the worker's steal loop.  No queued work anywhere →
+        nothing to do (the fast path during drain)."""
+        queued = [i for i, rep in enumerate(self.replicas)
+                  if rep.waiting_count() > 0]
+        if not queued:
+            return 0
+        moved = 0
+        for i, rep in enumerate(self.replicas):
+            if rep.wants_work():
+                moved += self.steal_for(i, pool=queued)
+        return moved
+
+    # -- live driving (EngineReplica pools) ----------------------------------
+    def step(self, steal_every: int = 2) -> int:
+        """One cluster step in live mode: step every engine, run the steal
+        loop periodically, harvest finished requests into telemetry."""
+        self._steps += 1
+        active = 0
+        for rep in self.replicas:
+            active += rep.step()
+        if self._steps % steal_every == 0:
+            self.steal_tick()
+        self.poll_finished()
+        return active
+
+    def poll_finished(self) -> None:
+        now = self.now()
+        done = []
+        for rid, req in self.outstanding.items():
+            if req.state == RequestState.DONE:
+                self._record_finish(req, self._owner.get(rid))
+                done.append(rid)
+            elif req.state == RequestState.CANCELLED:
+                self.telemetry.record_cancelled(req)
+                done.append(rid)
+            elif req.state == RequestState.WAITING and \
+                    req.deadline is not None and now > req.deadline:
+                # expired while queued: the batcher will prune it and it
+                # will never run — stop tracking it so drains terminate
+                self.telemetry.record_expired(req)
+                done.append(rid)
+        for rid in done:
+            del self.outstanding[rid]
+            self._owner.pop(rid, None)
+
+    def _record_finish(self, req: Request,
+                       replica_id: Optional[int] = None) -> None:
+        self.telemetry.record_finish(
+            req, req.finished_at if req.finished_at is not None
+            else self.now(), replica_id)
+
+    def on_finished(self, req: Request,
+                    replica_id: Optional[int] = None) -> None:
+        """Completion callback (the simulator pushes instead of polling)."""
+        self._record_finish(req, replica_id)
+        self.outstanding.pop(req.rid, None)
+        self._owner.pop(req.rid, None)
+
+    def run_until_drained(self, max_steps: int = 100_000,
+                          steal_every: int = 2) -> None:
+        for _ in range(max_steps):
+            self.step(steal_every=steal_every)
+            if not self.outstanding and all(
+                    getattr(r, "drained", lambda: True)() is True
+                    for r in self.replicas):
+                break
+
+    # -- health --------------------------------------------------------------
+    def health(self) -> List[dict]:
+        return [r.health() for r in self.replicas]

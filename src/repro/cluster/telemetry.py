@@ -1,0 +1,188 @@
+"""Cluster telemetry: per-SLO-class latency histograms plus steal accounting.
+
+Latencies go into log-spaced-bucket histograms (fixed memory per class no
+matter how many samples the discrete-event simulator pushes), keyed by SLO
+class (= the request's ``priority`` value).  The only per-request state is
+the finish-dedup id set (a few dozen MB at tens of millions of requests).  Steal events record
+both migrated request *count* and migrated *weight* — the distinction the
+steal-half-work vs steal-half-count comparison turns on.  ``summary()`` is
+JSON-serializable and is what ``benchmarks/cluster_scale.py`` writes out.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["LatencyHistogram", "ClusterTelemetry"]
+
+
+class LatencyHistogram:
+    """Log-bucketed histogram over (lo, hi] seconds; constant memory."""
+
+    def __init__(self, lo: float = 1e-4, hi: float = 1e5,
+                 buckets_per_decade: int = 48):
+        self.lo = lo
+        self.log_lo = math.log10(lo)
+        self.scale = buckets_per_decade
+        self.nbuckets = int(math.ceil((math.log10(hi) - self.log_lo)
+                                      * buckets_per_decade)) + 2
+        self.counts = np.zeros(self.nbuckets, np.int64)
+        self.total = 0
+        self.sum = 0.0
+        self.max = 0.0
+
+    def _bucket(self, v: float) -> int:
+        if v <= self.lo:
+            return 0
+        b = int((math.log10(v) - self.log_lo) * self.scale) + 1
+        return min(b, self.nbuckets - 1)
+
+    def record(self, v: float) -> None:
+        self.counts[self._bucket(v)] += 1
+        self.total += 1
+        self.sum += v
+        if v > self.max:
+            self.max = v
+
+    def merge(self, other: "LatencyHistogram") -> None:
+        self.counts += other.counts
+        self.total += other.total
+        self.sum += other.sum
+        self.max = max(self.max, other.max)
+
+    def percentile(self, p: float) -> float:
+        """Upper edge of the bucket holding the p-th percentile sample."""
+        if self.total == 0:
+            return 0.0
+        rank = p / 100.0 * self.total
+        cum = np.cumsum(self.counts)
+        b = int(np.searchsorted(cum, rank))
+        return 10.0 ** (self.log_lo + (b / self.scale))
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.total if self.total else 0.0
+
+
+class _ReplicaStats:
+    __slots__ = ("finished", "tokens", "steals_out", "steals_in",
+                 "requests_migrated_out", "weight_migrated_out")
+
+    def __init__(self):
+        self.finished = 0
+        self.tokens = 0
+        self.steals_out = 0
+        self.steals_in = 0
+        self.requests_migrated_out = 0
+        self.weight_migrated_out = 0
+
+    def as_dict(self) -> dict:
+        return {k: getattr(self, k) for k in self.__slots__}
+
+
+class ClusterTelemetry:
+    """Shared sink for routers and replicas, live or simulated."""
+
+    def __init__(self, num_replicas: int):
+        self.per_class: Dict[float, LatencyHistogram] = {}
+        self.ttft: Dict[float, LatencyHistogram] = {}
+        self.replicas: List[_ReplicaStats] = [
+            _ReplicaStats() for _ in range(num_replicas)]
+        self.steal_events = 0
+        self.requests_migrated = 0
+        self.weight_migrated = 0
+        self.cancelled = 0
+        self.deadline_misses = 0
+        self._seen: set = set()
+
+    # -- recording -----------------------------------------------------------
+    def _hist(self, table: Dict[float, LatencyHistogram],
+              slo: float) -> LatencyHistogram:
+        h = table.get(slo)
+        if h is None:
+            h = table[slo] = LatencyHistogram()
+        return h
+
+    def record_finish(self, req, now: float,
+                      replica_id: Optional[int] = None) -> None:
+        if req.rid in self._seen:
+            return
+        self._seen.add(req.rid)
+        self._hist(self.per_class, req.priority).record(now - req.arrival)
+        if req.first_token_at is not None:
+            self._hist(self.ttft, req.priority).record(
+                req.first_token_at - req.arrival)
+        if replica_id is not None:
+            st = self.replicas[replica_id]
+            st.finished += 1
+            st.tokens += req.generated
+        if req.deadline is not None and now > req.deadline:
+            self.deadline_misses += 1
+
+    def record_cancelled(self, req) -> None:
+        if req.rid not in self._seen:
+            self._seen.add(req.rid)
+            self.cancelled += 1
+
+    def record_expired(self, req) -> None:
+        """Deadline passed while still queued: never ran, never will."""
+        if req.rid not in self._seen:
+            self._seen.add(req.rid)
+            self.cancelled += 1
+            self.deadline_misses += 1
+
+    def record_steal(self, src: int, dst: int, requests: int,
+                     weight: int) -> None:
+        if requests <= 0:
+            return
+        self.steal_events += 1
+        self.requests_migrated += requests
+        self.weight_migrated += weight
+        self.replicas[src].steals_out += 1
+        self.replicas[src].requests_migrated_out += requests
+        self.replicas[src].weight_migrated_out += weight
+        self.replicas[dst].steals_in += 1
+
+    # -- reporting -----------------------------------------------------------
+    @property
+    def finished(self) -> int:
+        return sum(h.total for h in self.per_class.values())
+
+    def class_percentiles(self, slo: float) -> dict:
+        h = self.per_class.get(slo)
+        if h is None:
+            return {"count": 0}
+        return {"count": h.total, "mean_s": h.mean,
+                "p50_s": h.percentile(50), "p90_s": h.percentile(90),
+                "p99_s": h.percentile(99), "max_s": h.max}
+
+    def summary(self) -> dict:
+        return {
+            "finished": self.finished,
+            "cancelled": self.cancelled,
+            "deadline_misses": self.deadline_misses,
+            "steal_events": self.steal_events,
+            "requests_migrated": self.requests_migrated,
+            "weight_migrated": self.weight_migrated,
+            "per_class": {str(k): self.class_percentiles(k)
+                          for k in sorted(self.per_class)},
+            "ttft_per_class": {
+                str(k): {"p50_s": h.percentile(50), "p99_s": h.percentile(99)}
+                for k, h in sorted(self.ttft.items())},
+            "per_replica": [r.as_dict() for r in self.replicas],
+        }
+
+    def report(self) -> str:
+        lines = [f"finished={self.finished} cancelled={self.cancelled} "
+                 f"steals={self.steal_events} "
+                 f"migrated_requests={self.requests_migrated} "
+                 f"migrated_weight={self.weight_migrated}"]
+        for slo in sorted(self.per_class):
+            c = self.class_percentiles(slo)
+            lines.append(
+                f"  slo={slo:g}: n={c['count']} mean={c['mean_s']*1e3:.1f}ms "
+                f"p50={c['p50_s']*1e3:.1f}ms p90={c['p90_s']*1e3:.1f}ms "
+                f"p99={c['p99_s']*1e3:.1f}ms")
+        return "\n".join(lines)

@@ -21,7 +21,7 @@ import itertools
 import time
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -123,11 +123,37 @@ class ContinuousBatcher:
         self.metrics = {"admitted": 0, "evicted_dead": 0,
                         "merged_prefills": 0, "steps": 0,
                         "deadline_misses": 0}
+        # thieves probe load counters far more often than queues mutate, so
+        # the O(queue) scans are cached behind a mutation version stamp
+        self._version = 0
+        self._cache_version = -1
+        self._cached: Tuple[int, int, int] = (0, 0, 0)
+
+    def _bump(self) -> None:
+        self._version += 1
+
+    def _load_counters(self) -> Tuple[int, int, int]:
+        """(waiting_count, waiting_weight, running_weight), cached.  Dead
+        requests (cancelled / deadline-expired) are excluded — they will
+        never run, so they are not load.  A cancel() between mutations can
+        be reflected one read late; every plan/pop/steal resyncs."""
+        if self._cache_version != self._version:
+            n = w = 0
+            for it in self._waiting:
+                if it.strategy.request.state == RequestState.WAITING \
+                        and not it.strategy.is_dead():
+                    n += 1
+                    w += it.strategy.request.est_remaining_work
+            rw = sum(r.est_remaining_work for r in self.running.values())
+            self._cached = (n, w, rw)
+            self._cache_version = self._version
+        return self._cached
 
     # -- queue ops ----------------------------------------------------------
     def submit(self, request: Request) -> None:
         heapq.heappush(self._waiting,
                        _HeapItem(RequestStrategy(request, self.now)))
+        self._bump()
 
     def submit_many(self, requests: Sequence[Request]) -> None:
         for r in requests:
@@ -135,46 +161,75 @@ class ContinuousBatcher:
 
     @property
     def waiting_count(self) -> int:
-        return sum(1 for it in self._waiting
-                   if it.strategy.request.state == RequestState.WAITING)
+        return self._load_counters()[0]
+
+    def waiting_weight(self) -> int:
+        """Estimated work sitting in the queue — the stealable part."""
+        return self._load_counters()[1]
 
     def backlog_weight(self) -> int:
         """Estimated outstanding work (for cross-replica stealing)."""
-        w = sum(it.strategy.request.est_remaining_work
-                for it in self._waiting
-                if it.strategy.request.state == RequestState.WAITING)
-        w += sum(r.est_remaining_work for r in self.running.values())
-        return w
+        c = self._load_counters()
+        return c[1] + c[2]
+
+    def _live_waiting(self) -> List[_HeapItem]:
+        return [it for it in self._waiting
+                if it.strategy.request.state == RequestState.WAITING
+                and not it.strategy.is_dead()]
+
+    def _extract(self, take: List[_HeapItem]) -> List[Request]:
+        """Remove ``take`` from the waiting heap in one pass, pruning dead
+        requests on the way (they are never migrated)."""
+        taken = {id(it) for it in take}
+        live = [it for it in self._waiting
+                if id(it) not in taken
+                and it.strategy.request.state == RequestState.WAITING
+                and not it.strategy.is_dead()]
+        dead = len(self._waiting) - len(live) - len(take)
+        if dead:
+            self.metrics["evicted_dead"] += dead
+        if len(live) != len(self._waiting):
+            self._waiting = live
+            heapq.heapify(self._waiting)
+            self._bump()
+        return [it.strategy.request for it in take]
 
     def steal_waiting(self, target_weight: int) -> List[Request]:
         """Remove waiting requests worth ~``target_weight`` (largest-weight
         first — steal work, not count) for migration to another replica."""
-        items = [it for it in self._waiting
-                 if it.strategy.request.state == RequestState.WAITING]
+        items = self._live_waiting()
         items.sort(key=lambda it: -it.strategy.request.est_remaining_work)
-        stolen, got = [], 0
+        take, got = [], 0
         for it in items:
             if got >= target_weight:
                 break
-            stolen.append(it.strategy.request)
-            it.strategy.request.state = RequestState.CANCELLED  # tombstone
+            take.append(it)
             got += it.strategy.request.est_remaining_work
-        out = []
-        for r in stolen:  # revive on the new replica
-            r.state = RequestState.WAITING
-            out.append(r)
-        self._prune()
-        return out
+        return self._extract(take)
 
-    def _prune(self) -> None:
-        live = [it for it in self._waiting
-                if it.strategy.request.state == RequestState.WAITING
-                and not it.strategy.is_dead()]
-        dead = len(self._waiting) - len(live)
-        if dead:
-            self.metrics["evicted_dead"] += dead
-            self._waiting = live
-            heapq.heapify(self._waiting)
+    def steal_waiting_count(self, n: int) -> List[Request]:
+        """Remove up to ``n`` waiting requests oldest-first (the classic
+        FIFO steal order, oblivious to weight) for migration to another
+        replica.  The steal-half-*count* baseline the paper argues against."""
+        items = self._live_waiting()
+        items.sort(key=lambda it: it.strategy.request.arrival)
+        return self._extract(items[:max(0, n)])
+
+    def pop_next_waiting(self) -> Optional[Request]:
+        """Public admission primitive: highest-strategy-priority live waiting
+        request, with dead requests pruned (and counted) on the way."""
+        return self._pop_waiting()
+
+    # -- external-executor hooks (the cluster simulator models execution
+    #    itself, bypassing plan_step, but must keep load counters honest) --
+    def mark_running(self, request: Request) -> None:
+        request.state = RequestState.RUNNING
+        self.running[request.rid] = request
+        self._bump()
+
+    def finish_running(self, request: Request) -> None:
+        self.running.pop(request.rid, None)
+        self._bump()
 
     # -- planning -----------------------------------------------------------
     def plan_step(self) -> BatchPlan:
@@ -212,11 +267,13 @@ class ContinuousBatcher:
         # 3. everyone running decodes one token this step
         plan.decode = list(self.running.values())
         self.metrics["admitted"] += len(plan.prefill) + len(plan.admitted)
+        self._bump()            # running-set / queue mutations above
         return plan
 
     def _pop_waiting(self) -> Optional[Request]:
         while self._waiting:
             item = heapq.heappop(self._waiting)
+            self._bump()
             strat = item.strategy
             if strat.is_dead():
                 self.metrics["evicted_dead"] += 1
@@ -237,10 +294,12 @@ class ContinuousBatcher:
             if r.first_token_at is None:
                 r.first_token_at = self.now()
             self.running[r.rid] = r
+        self._bump()
 
     def complete_decode(self, requests: Sequence[Request]) -> None:
         for r in requests:
             r.generated += 1
+        self._bump()
 
 
 def rebalance_replicas(batchers: Sequence[ContinuousBatcher]) -> int:

@@ -1,7 +1,14 @@
 """Serving driver: strategy-scheduled continuous batching.
 
+Single replica:
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
         --requests 16
+
+Multi-replica (cluster router with configurable steal policy):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --replicas 2 --requests 16 --steal half_work
 """
 from __future__ import annotations
 
@@ -11,28 +18,15 @@ import time
 import jax
 import numpy as np
 
+from ..cluster import (ClusterRouter, ClusterTelemetry, EngineReplica,
+                       StealPolicy)
 from ..configs import get_config, scale_down
+from ..core.device.request_scheduler import Request
 from ..models import build_model
 from ..serving import ServingEngine
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-1.5b")
-    ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--s-max", type=int, default=128)
-    ap.add_argument("--max-new-tokens", type=int, default=16)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = scale_down(cfg, layers=4, d_model=256, d_ff=1024,
-                         vocab=min(cfg.vocab_size, 32768))
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
+def _serve_single(args, model, params, cfg) -> None:
     eng = ServingEngine(model, params, max_batch=args.max_batch,
                         s_max=args.s_max)
     rng = np.random.default_rng(args.seed)
@@ -52,6 +46,66 @@ def main() -> None:
           f"{dt:.2f}s ({toks / dt:.1f} tok/s)")
     print(f"scheduler: steps={m['steps']} merged_prefills="
           f"{m['merged_prefills']} evicted_dead={m['evicted_dead']}")
+
+
+def _serve_cluster(args, model, params, cfg) -> None:
+    replicas = [
+        EngineReplica(i, ServingEngine(model, params,
+                                       max_batch=args.max_batch,
+                                       s_max=args.s_max))
+        for i in range(args.replicas)]
+    policy = StealPolicy(amount=args.steal, placement=args.placement)
+    router = ClusterRouter(replicas, policy=policy,
+                           telemetry=ClusterTelemetry(args.replicas))
+    rng = np.random.default_rng(args.seed)
+    t0 = time.perf_counter()
+    reqs = []
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size, int(rng.integers(4, 48)))
+        req = Request(prompt_len=len(prompt),
+                      max_new_tokens=args.max_new_tokens,
+                      priority=float(i % 3))
+        router.submit(req, tokens=prompt)
+        reqs.append(req)
+    router.run_until_drained()
+    dt = time.perf_counter() - t0
+    done = sum(1 for r in reqs if r.state.name == "DONE")
+    toks = sum(r.generated for r in reqs)
+    print(f"completed {done}/{len(reqs)} requests, {toks} tokens in "
+          f"{dt:.2f}s ({toks / dt:.1f} tok/s) on {args.replicas} replicas")
+    print(router.telemetry.report())
+    for h in router.health():
+        print(f"  replica {h['replica_id']}: backlog={h['backlog_weight']} "
+              f"waiting={h['waiting']} active={h['active']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--s-max", type=int, default=128)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--steal", default="half_work",
+                    choices=["half_work", "half_count", "none"])
+    ap.add_argument("--placement", default="round_robin",
+                    choices=["round_robin", "random", "least_of_d",
+                             "least_work", "slo_aware"])
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = scale_down(cfg, layers=4, d_model=256, d_ff=1024,
+                         vocab=min(cfg.vocab_size, 32768))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    if args.replicas > 1:
+        _serve_cluster(args, model, params, cfg)
+    else:
+        _serve_single(args, model, params, cfg)
 
 
 if __name__ == "__main__":

@@ -60,6 +60,27 @@ class ServingEngine:
         self.batcher.submit(req)
         return req
 
+    def submit_request(self, req: Request, tokens: np.ndarray) -> None:
+        """Register an externally-created request (cluster router placement
+        or a steal migration from another replica)."""
+        self.prompts[req.rid] = np.asarray(tokens, np.int32)
+        self.outputs.setdefault(req.rid, [])
+        self.batcher.submit(req)
+
+    def export_waiting(self, target_weight: Optional[int] = None,
+                       count: Optional[int] = None):
+        """Yield waiting requests (with their prompt tokens) to a thief.
+        Only never-prefilled requests migrate, so no KV cache moves."""
+        if target_weight is not None:
+            stolen = self.batcher.steal_waiting(target_weight)
+        else:
+            stolen = self.batcher.steal_waiting_count(count or 0)
+        out = []
+        for r in stolen:
+            out.append((r, self.prompts.pop(r.rid)))
+            self.outputs.pop(r.rid, None)
+        return out
+
     # -- engine loop ----------------------------------------------------------
     def _free_slot(self) -> Optional[int]:
         for i, r in enumerate(self.slot_req):
@@ -93,7 +114,8 @@ class ServingEngine:
         for req in plan.prefill:
             slot = self._free_slot()
             if slot is None:
-                self.batcher.submit(req)     # no capacity; retry next step
+                req.state = RequestState.WAITING   # lost its slot; requeue
+                self.batcher.submit(req)
                 continue
             toks = self.prompts[req.rid][None, :]
             logits, cache_one = self._prefill(

@@ -1,0 +1,96 @@
+"""Minimal stand-in for the subset of ``hypothesis`` the test-suite uses.
+
+The tier-1 suite must collect (and pass) on machines without hypothesis
+installed.  Property tests degrade to a deterministic sweep of pseudo-random
+examples: ``@given`` re-runs the test ``max_examples`` times (from the
+paired ``@settings``), drawing each argument from a seeded RNG.  Shrinking,
+example databases and the rest of hypothesis are intentionally absent.
+
+Usage (in test modules):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from typing import Any, Callable, Sequence
+
+__all__ = ["given", "settings", "st", "strategies"]
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0,
+               **_: Any) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(elements: Sequence[Any]) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng: random.Random):
+            n = rng.randint(min_size, max_size)
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+
+st = strategies = _Strategies()
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_: Any):
+    """Record ``max_examples`` on the function for ``given`` to pick up
+    (other hypothesis settings — deadline etc. — are ignored)."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        n = getattr(fn, "_fallback_max_examples", _DEFAULT_EXAMPLES)
+
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            for i in range(n):
+                rng = random.Random(0xC0FFEE + i)
+                drawn = tuple(s.draw(rng) for s in strats)
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except Exception as exc:
+                    raise AssertionError(
+                        f"falsifying example (fallback run {i}): "
+                        f"{fn.__name__}{drawn!r}") from exc
+        # pytest must not mistake the drawn arguments for fixtures
+        runner.__signature__ = inspect.Signature()
+        del runner.__wrapped__
+        runner._fallback_max_examples = n
+        return runner
+    return deco

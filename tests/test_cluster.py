@@ -1,0 +1,334 @@
+"""Cluster subsystem: steal policies, router placement, rebalancing, the
+discrete-event simulator, and telemetry."""
+import numpy as np
+import pytest
+
+from repro.cluster import (ClassSpec, ClusterRouter, ClusterTelemetry,
+                           LatencyHistogram, SimClock, SimReplica,
+                           Simulation, StealPolicy, run_cluster_sim)
+from repro.core.device import ContinuousBatcher, Request, rebalance_replicas
+from repro.core.machine import pod_machine
+
+
+def _reqs(sizes, priority=1.0):
+    return [Request(prompt_len=s, max_new_tokens=s, priority=priority)
+            for s in sizes]
+
+
+# ------------------------------------------------------------- rebalancing
+def test_rebalance_steals_half_weight_not_half_count():
+    b1, b2 = ContinuousBatcher(), ContinuousBatcher()
+    small = _reqs([10] * 4)          # weight 20 each
+    big = _reqs([500] * 4)           # weight 1000 each
+    b1.submit_many(small + big)
+    moved = rebalance_replicas([b1, b2])
+    assert moved > 0
+    # surplus/2 ≈ 1020 of 4080 total weight → two big requests, not four
+    assert b2.waiting_count <= 3
+    assert b2.waiting_weight() >= 1000     # it took heavy ones first
+
+
+def test_rebalance_balanced_pool_migrates_nothing():
+    b1, b2 = ContinuousBatcher(), ContinuousBatcher()
+    b1.submit_many(_reqs([50] * 4))
+    b2.submit_many(_reqs([50] * 4))
+    assert rebalance_replicas([b1, b2]) == 0
+    assert b1.waiting_count == 4 and b2.waiting_count == 4
+
+
+def test_rebalance_empty_pool():
+    assert rebalance_replicas([ContinuousBatcher(), ContinuousBatcher()]) == 0
+
+
+# ------------------------------------------------------ steal primitives
+def test_steal_waiting_removes_from_victim():
+    b = ContinuousBatcher()
+    b.submit_many(_reqs([100, 100, 100, 100]))
+    stolen = b.steal_waiting(200)
+    assert len(stolen) == 1        # first request already reaches the target
+    # regression: stolen requests must be GONE from the victim's queue
+    assert b.waiting_count == 3
+    remaining = set()
+    while True:
+        r = b.pop_next_waiting()
+        if r is None:
+            break
+        remaining.add(r.rid)
+    assert remaining.isdisjoint({r.rid for r in stolen})
+
+
+def test_steal_never_migrates_dead_requests():
+    b = ContinuousBatcher()
+    live = _reqs([100, 100])
+    doomed = _reqs([1000, 1000])
+    b.submit_many(live + doomed)
+    for r in doomed:
+        r.cancel()
+    stolen = b.steal_waiting(10_000)       # ask for everything
+    assert {r.rid for r in stolen} == {r.rid for r in live}
+    assert all(r.state.name == "WAITING" for r in stolen)
+    stolen2 = b.steal_waiting_count(10)
+    assert stolen2 == []
+    assert b.waiting_count == 0
+
+
+def test_steal_never_migrates_expired_requests():
+    now = [0.0]
+    b = ContinuousBatcher(now=lambda: now[0])
+    fresh = Request(prompt_len=10, max_new_tokens=10)
+    stale = Request(prompt_len=10, max_new_tokens=10, deadline=1.0)
+    b.submit_many([fresh, stale])
+    now[0] = 5.0
+    stolen = b.steal_waiting(1_000)
+    assert [r.rid for r in stolen] == [fresh.rid]
+
+
+def test_steal_waiting_count_is_oldest_first():
+    b = ContinuousBatcher()
+    reqs = _reqs([10, 1000, 10, 1000])
+    b.submit_many(reqs)
+    stolen = b.steal_waiting_count(2)
+    assert [r.rid for r in stolen] == [reqs[0].rid, reqs[1].rid]
+    assert b.waiting_count == 2
+
+
+# ------------------------------------------------------------ router policy
+def _pool(n, slots=4, machine=None, **policy_kw):
+    clock = SimClock()
+    replicas = [SimReplica(i, clock, slots=slots) for i in range(n)]
+    router = ClusterRouter(replicas, machine=machine,
+                           policy=StealPolicy(**policy_kw),
+                           telemetry=ClusterTelemetry(n), now=clock.now,
+                           seed=0)
+    return router, replicas
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        StealPolicy(amount="half_hearted")
+    with pytest.raises(ValueError):
+        StealPolicy(victim="scapegoat")
+    with pytest.raises(ValueError):
+        StealPolicy(placement="wherever")
+
+
+def test_router_half_work_steals_heaviest():
+    router, (r0, r1) = _pool(2, amount="half_work", victim="max_loaded")
+    sizes = [10, 10, 10, 10, 500, 500]
+    for req in _reqs(sizes):
+        r0.submit(req)
+    total = r0.waiting_weight()
+    moved = router.steal_for(1)
+    assert moved > 0
+    # half the WEIGHT: the two big requests cover it
+    assert r1.waiting_weight() >= total // 2
+    assert r1.waiting_count() == 2
+    # conservation: nothing lost, nothing duplicated
+    assert r0.waiting_count() + r1.waiting_count() == len(sizes)
+    assert router.telemetry.steal_events == 1
+    assert router.telemetry.requests_migrated == 2
+
+
+def test_router_half_count_steals_count():
+    router, (r0, r1) = _pool(2, amount="half_count", victim="max_loaded")
+    for req in _reqs([10, 10, 10, 10, 500, 500]):
+        r0.submit(req)
+    router.steal_for(1)
+    assert r1.waiting_count() == 3         # half of six, weight-oblivious
+    assert r0.waiting_count() == 3
+
+
+def test_router_amount_none_never_steals():
+    router, (r0, r1) = _pool(2, amount="none")
+    for req in _reqs([100] * 6):
+        r0.submit(req)
+    assert router.steal_tick() == 0
+    assert r1.waiting_count() == 0
+
+
+def test_router_nearest_victim_prefers_same_pod():
+    machine = pod_machine(2, 2)            # replicas {0,1} and {2,3}
+    router, reps = _pool(4, machine=machine, amount="half_work",
+                         victim="nearest", probe=1)
+    for req in _reqs([100] * 4):
+        reps[2].submit(req)                # same pod as thief 3
+    for req in _reqs([100] * 4):
+        reps[0].submit(req)                # other pod
+    router.steal_for(3)
+    assert reps[3].waiting_count() > 0
+    assert router.telemetry.replicas[2].steals_out == 1
+    assert router.telemetry.replicas[0].steals_out == 0
+
+
+def test_router_balanced_pool_steal_tick_noop():
+    router, reps = _pool(2, amount="half_work")
+    # both replicas loaded the same → no one wants work, nothing moves
+    for rep in reps:
+        for req in _reqs([50] * 6):
+            rep.submit(req)
+    # fill the slots so neither replica is idle
+    assert router.steal_tick() == 0
+
+
+def test_router_least_work_placement():
+    router, (r0, r1) = _pool(2, placement="least_work")
+    for req in _reqs([100] * 3):
+        r0.submit(req)
+    req = Request(prompt_len=10, max_new_tokens=10)
+    assert router.submit(req) == 1         # lighter replica wins
+
+
+def test_router_slo_aware_placement_scans_for_urgent():
+    router, reps = _pool(8, placement="slo_aware", probe=2)
+    for i, rep in enumerate(reps):
+        if i != 5:
+            for req in _reqs([100] * 2):
+                rep.submit(req)
+    urgent = Request(prompt_len=10, max_new_tokens=10, priority=0.0)
+    assert router.submit(urgent) == 5      # global scan finds the idle one
+
+
+# ---------------------------------------------------------------- simulator
+def test_sim_completes_all_requests():
+    tel = run_cluster_sim(8, 400, StealPolicy(amount="half_work"),
+                          utilization=0.8, seed=1)
+    assert tel.finished == 400
+    s = tel.summary()
+    assert s["per_class"]               # at least one SLO class reported
+    assert sum(r["finished"] for r in s["per_replica"]) == 400
+
+
+def test_sim_steals_happen_under_imbalance():
+    tel = run_cluster_sim(
+        8, 600, StealPolicy(amount="half_work", victim="random",
+                            placement="round_robin"),
+        size_dist="pareto", utilization=0.9, seed=2)
+    assert tel.finished == 600
+    assert tel.steal_events > 0
+    assert tel.weight_migrated > 0
+
+
+def test_sim_cancelled_request_never_runs():
+    clock = SimClock()
+    reps = [SimReplica(0, clock, slots=1)]
+    router = ClusterRouter(reps, policy=StealPolicy(amount="none"),
+                           telemetry=ClusterTelemetry(1), now=clock.now)
+    sim = Simulation(router, clock, steal_interval=None)
+    blocker = Request(prompt_len=64, max_new_tokens=64, arrival=0.0)
+    router.submit(blocker)                 # occupies the only slot
+    doomed = Request(prompt_len=64, max_new_tokens=64, arrival=0.0)
+    router.submit(doomed)
+    doomed.cancel()
+    sim.run()
+    assert blocker.state.name == "DONE"
+    assert doomed.state.name == "CANCELLED"
+    assert doomed.generated == 0
+
+
+def test_sim_expired_deadline_never_runs():
+    clock = SimClock()
+    reps = [SimReplica(0, clock, slots=1)]
+    router = ClusterRouter(reps, policy=StealPolicy(amount="none"),
+                           telemetry=ClusterTelemetry(1), now=clock.now)
+    sim = Simulation(router, clock, steal_interval=None)
+    blocker = Request(prompt_len=64, max_new_tokens=640, arrival=0.0)
+    router.submit(blocker)                 # runs ~10s on the modeled clock
+    tight = Request(prompt_len=64, max_new_tokens=64, arrival=0.0,
+                    deadline=0.5)
+    router.submit(tight)                   # queued; expires before the slot
+    sim.run()
+    assert blocker.state.name == "DONE"
+    assert tight.generated == 0
+    assert reps[0].batcher.metrics["deadline_misses"] == 1
+
+
+def test_sim_half_work_beats_half_count_on_heavy_tail():
+    """The acceptance comparison, at CI-friendly scale."""
+    results = {}
+    for amount in ("half_work", "half_count"):
+        tel = run_cluster_sim(
+            32, 4000,
+            StealPolicy(amount=amount, victim="random",
+                        placement="round_robin"),
+            size_dist="pareto", utilization=0.9, seed=7)
+        assert tel.finished == 4000
+        results[amount] = tel.class_percentiles(0.0)
+    assert results["half_work"]["p99_s"] <= results["half_count"]["p99_s"]
+    assert results["half_work"]["mean_s"] < results["half_count"]["mean_s"]
+
+
+def test_sim_drained_replica_reports_zero_backlog():
+    """Regression: completion must invalidate the cached load counters."""
+    clock = SimClock()
+    reps = [SimReplica(0, clock, slots=1)]
+    router = ClusterRouter(reps, policy=StealPolicy(amount="none"),
+                           telemetry=ClusterTelemetry(1), now=clock.now)
+    sim = Simulation(router, clock, steal_interval=None)
+    req = Request(prompt_len=64, max_new_tokens=64, arrival=0.0)
+    router.submit(req)
+    sim.run()
+    assert req.state.name == "DONE"
+    assert reps[0].backlog_weight() == 0
+    assert reps[0].active_count() == 0
+
+
+def test_router_poll_drops_expired_outstanding():
+    """Regression: a deadline-expired queued request must leave
+    ``outstanding`` (live-mode drains would otherwise never terminate)."""
+    now = [0.0]
+    clock_now = lambda: now[0]
+    reps = [SimReplica(0, SimClock(), slots=1)]
+    router = ClusterRouter(reps, policy=StealPolicy(amount="none"),
+                           telemetry=ClusterTelemetry(1), now=clock_now)
+    req = Request(prompt_len=10, max_new_tokens=10, arrival=0.0,
+                  deadline=1.0)
+    router.submit(req)
+    now[0] = 5.0
+    router.poll_finished()
+    assert req.rid not in router.outstanding
+    assert router.telemetry.deadline_misses == 1
+    assert router.telemetry.cancelled == 1
+
+
+def test_workload_classes_mix():
+    spec = (ClassSpec(priority=0.0, share=0.5, mean_prompt_len=16,
+                      mean_new_tokens=8),
+            ClassSpec(priority=1.0, share=0.5, mean_prompt_len=64,
+                      mean_new_tokens=32, size_dist="pareto"))
+    tel = run_cluster_sim(4, 300, StealPolicy(), classes=spec, seed=3)
+    assert tel.finished == 300
+    assert set(tel.per_class) == {0.0, 1.0}
+
+
+# ---------------------------------------------------------------- telemetry
+def test_histogram_percentiles():
+    h = LatencyHistogram()
+    rng = np.random.default_rng(0)
+    xs = rng.exponential(1.0, 20000)
+    for x in xs:
+        h.record(x)
+    assert h.total == 20000
+    # log-bucket edges are within one bucket (~5%) of the true quantile
+    for p in (50, 90, 99):
+        true = float(np.percentile(xs, p))
+        assert abs(h.percentile(p) - true) / true < 0.12
+    assert h.percentile(50) <= h.percentile(90) <= h.percentile(99)
+
+
+def test_histogram_merge():
+    a, b = LatencyHistogram(), LatencyHistogram()
+    for v in (0.1, 0.2, 0.3):
+        a.record(v)
+    for v in (10.0, 20.0):
+        b.record(v)
+    a.merge(b)
+    assert a.total == 5
+    assert a.max == 20.0
+
+
+def test_telemetry_dedupes_finishes():
+    tel = ClusterTelemetry(1)
+    req = Request(prompt_len=4, max_new_tokens=4, arrival=0.0)
+    tel.record_finish(req, 1.0, 0)
+    tel.record_finish(req, 2.0, 0)
+    assert tel.finished == 1

@@ -2,7 +2,10 @@
 guarantee: any mix of strategy types yields a well-defined total order)."""
 import random
 
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # optional dep: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (BaseStrategy, DepthFirstStrategy, FifoStrategy,
                         PriorityStrategy, RandomStealStrategy, local_before,
