@@ -1,0 +1,285 @@
+"""Scheduler hot-path microbenchmark sweep (writes ``BENCH_scheduler.json``).
+
+Measures the scheduler's innermost loops:
+
+* **storage** — raw push/pop and steal throughput of
+  ``StrategyTaskStorage`` (homogeneous fast path vs mixed strategy types)
+  and the ``DequeTaskStorage`` baseline, no scheduler around them;
+* **spray** — spawn+execute throughput of N trivial tasks through the full
+  scheduler: merged (``spawn_many``), unmerged (per-task ``spawn_s``) and
+  the deque baseline;
+* **quicksort / prefix_sum** — the paper's fine-grained apps at small
+  cutoff/block sizes (scheduler overhead dominates), merged vs unmerged vs
+  deque; throughput is elements processed per second.
+
+Run directly::
+
+    PYTHONPATH=src python benchmarks/scheduler_hotpath.py [--quick]
+        [--assert-merged-wins] [--repeats N] [--out BENCH_scheduler.json]
+
+``--assert-merged-wins`` exits non-zero unless merged quicksort throughput
+is at least the unmerged throughput (the CI smoke gate).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.apps import prefix_sum, quicksort
+from repro.core import (BaseStrategy, DequeTaskStorage, FinishRegion,
+                        PriorityStrategy, StrategyTaskStorage, Task)
+
+
+# --------------------------------------------------------------------------
+# raw storage ops (no scheduler)
+# --------------------------------------------------------------------------
+
+def _mk_task(strategy, region):
+    region.inc()
+    return Task(lambda: None, (), {}, strategy, region)
+
+
+def _drain(storage):
+    while True:
+        t = storage.pop_local()
+        if t is None:
+            return
+        t.region.dec()
+
+
+def bench_storage_ops(n: int, repeats: int) -> dict:
+    """push+pop ops/sec for each storage flavour, steal ops/sec."""
+    out = {}
+
+    def timed(make_strategy, storage_cls, label):
+        best = None
+        for _ in range(repeats):
+            storage = storage_cls(place_id=0)
+            region = FinishRegion()
+            t0 = time.perf_counter()
+            for i in range(n):
+                storage.push(_mk_task(make_strategy(i), region))
+            _drain(storage)
+            dt = time.perf_counter() - t0
+            best = dt if best is None else min(best, dt)
+        out[label] = {"ops": 2 * n, "time_s": best,
+                      "ops_per_s": 2 * n / best}
+
+    timed(lambda i: BaseStrategy(place=0), StrategyTaskStorage,
+          "strategy_homogeneous")
+    timed(lambda i: (BaseStrategy(place=0) if i % 2 == 0
+                     else PriorityStrategy(priority=float(i), place=0)),
+          StrategyTaskStorage, "strategy_mixed")
+    timed(lambda i: BaseStrategy(place=0), DequeTaskStorage, "deque")
+
+    # steal throughput: refill once, steal everything in max-1-task bites
+    best = None
+    for _ in range(repeats):
+        storage = StrategyTaskStorage(place_id=0)
+        region = FinishRegion()
+        for i in range(n):
+            storage.push(_mk_task(BaseStrategy(place=0), region))
+        stolen = 0
+        t0 = time.perf_counter()
+        while storage.ready_count:
+            batch, _w = storage.steal_batch(stealer_id=1, half_work=False,
+                                            max_tasks=1)
+            for t in batch:
+                t.region.dec()
+            stolen += len(batch)
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+        assert stolen == n
+    out["strategy_steal"] = {"ops": n, "time_s": best, "ops_per_s": n / best}
+    return out
+
+
+# --------------------------------------------------------------------------
+# full-scheduler task spray
+# --------------------------------------------------------------------------
+
+def bench_spray(n: int, places: int, repeats: int) -> dict:
+    from repro.core import (MergePolicy, SchedulerConfig, StrategyScheduler,
+                            WorkStealingScheduler, spawn_many, spawn_s)
+
+    done = []            # list.append is atomic under the GIL
+
+    def tick(i):
+        done.append(i)
+
+    def root_merged():
+        spawn_many(tick, [(i,) for i in range(n)])
+
+    def root_unmerged():
+        for i in range(n):
+            spawn_s(BaseStrategy(), tick, i)
+
+    out = {}
+    for label, mk_sched, root in (
+            ("merged",
+             lambda: StrategyScheduler(num_places=places,
+                                       config=SchedulerConfig(seed=0)),
+             root_merged),
+            ("unmerged",
+             lambda: StrategyScheduler(
+                 num_places=places,
+                 config=SchedulerConfig(
+                     seed=0, merge_policy=MergePolicy(max_chunk=1))),
+             root_unmerged),
+            ("deque",
+             lambda: WorkStealingScheduler(num_places=places, seed=0),
+             root_unmerged)):
+        best = None
+        for _ in range(repeats):
+            done.clear()
+            sched = mk_sched()
+            t0 = time.perf_counter()
+            sched.run(root)
+            dt = time.perf_counter() - t0
+            assert len(done) == n
+            best = dt if best is None else min(best, dt)
+        out[label] = {"tasks": n, "time_s": best, "tasks_per_s": n / best}
+    out["merged_speedup_vs_unmerged"] = (
+        out["unmerged"]["time_s"] / out["merged"]["time_s"])
+    return out
+
+
+# --------------------------------------------------------------------------
+# fine-grained paper apps
+# --------------------------------------------------------------------------
+
+def _best(run, repeats, **kw):
+    best = None
+    for rep in range(repeats):
+        r = run(seed=rep, **kw)
+        if best is None or r["time_s"] < best["time_s"]:
+            best = r
+    return best
+
+
+def bench_quicksort(n: int, cutoff: int, places: int, repeats: int) -> dict:
+    out = {}
+    for label, kw in (("merged", dict(merge=True)),
+                      ("unmerged", dict(merge=False)),
+                      ("deque", dict(scheduler="deque"))):
+        r = _best(quicksort.run_quicksort, repeats, n=n, cutoff=cutoff,
+                  num_places=places, **kw)
+        out[label] = {"n": n, "cutoff": cutoff, "time_s": r["time_s"],
+                      "elements_per_s": n / r["time_s"],
+                      "spawns": r["spawns"],
+                      "merge_chunks": r.get("merge_chunks", 0),
+                      "calls_converted": r.get("calls_converted", 0)}
+    out["merged_speedup_vs_unmerged"] = (
+        out["unmerged"]["time_s"] / out["merged"]["time_s"])
+    return out
+
+
+def bench_prefix_sum(n: int, block: int, places: int, repeats: int) -> dict:
+    out = {}
+    for label, kw in (("merged", dict(merge=True)),
+                      ("unmerged", dict(merge=False)),
+                      ("deque", dict(scheduler="deque"))):
+        r = _best(prefix_sum.run_prefix_sum, repeats, n=n, block=block,
+                  num_places=places, **kw)
+        out[label] = {"n": n, "block": block, "time_s": r["time_s"],
+                      "elements_per_s": n / r["time_s"],
+                      "spawns": r["spawns"],
+                      "merge_chunks": r.get("merge_chunks", 0),
+                      "one_pass_fraction": r["one_pass_fraction"]}
+    out["merged_speedup_vs_unmerged"] = (
+        out["unmerged"]["time_s"] / out["merged"]["time_s"])
+    return out
+
+
+# --------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes for CI smoke runs")
+    ap.add_argument("--places", type=int, default=4)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_scheduler.json")
+    ap.add_argument("--assert-merged-wins", action="store_true",
+                    help="fail unless merged quicksort >= unmerged (within "
+                         "--min-speedup tolerance) AND merged spray >= 2x "
+                         "unmerged")
+    ap.add_argument("--min-speedup", type=float, default=1.0,
+                    help="quicksort threshold for --assert-merged-wins; CI "
+                         "uses 0.85 because quicksort at this granularity "
+                         "is partition-bound (merged ~= unmerged is the "
+                         "expected floor) and shared runners are noisy. "
+                         "The scheduler-bound regression signal is the "
+                         "spray gate, which has ~40x of margin.")
+    args = ap.parse_args(argv)
+
+    if args.quick:
+        sizes = dict(storage_n=20_000, spray_n=20_000,
+                     qsort_n=200_000, qsort_cutoff=64,
+                     prefix_n=500_000, prefix_block=512)
+    else:
+        sizes = dict(storage_n=100_000, spray_n=100_000,
+                     qsort_n=1_000_000, qsort_cutoff=64,
+                     prefix_n=2_000_000, prefix_block=512)
+
+    results = {"config": {"places": args.places, "repeats": args.repeats,
+                          **sizes}}
+
+    print("== raw storage ops ==", flush=True)
+    results["storage"] = bench_storage_ops(sizes["storage_n"], args.repeats)
+    for k, v in results["storage"].items():
+        print(f"  {k:24s} {v['ops_per_s'] / 1e3:10.1f} kops/s")
+
+    print("== task spray (spawn+execute) ==", flush=True)
+    results["spray"] = bench_spray(sizes["spray_n"], args.places,
+                                   args.repeats)
+    for k in ("merged", "unmerged", "deque"):
+        v = results["spray"][k]
+        print(f"  {k:24s} {v['tasks_per_s'] / 1e3:10.1f} ktasks/s")
+    print(f"  merged speedup vs unmerged: "
+          f"{results['spray']['merged_speedup_vs_unmerged']:.2f}x")
+
+    print("== fine-grained quicksort ==", flush=True)
+    results["quicksort"] = bench_quicksort(
+        sizes["qsort_n"], sizes["qsort_cutoff"], args.places, args.repeats)
+    for k in ("merged", "unmerged", "deque"):
+        v = results["quicksort"][k]
+        print(f"  {k:24s} {v['elements_per_s'] / 1e6:10.2f} Melem/s "
+              f"(spawns={v['spawns']})")
+    print(f"  merged speedup vs unmerged: "
+          f"{results['quicksort']['merged_speedup_vs_unmerged']:.2f}x")
+
+    print("== fine-grained prefix_sum ==", flush=True)
+    results["prefix_sum"] = bench_prefix_sum(
+        sizes["prefix_n"], sizes["prefix_block"], args.places, args.repeats)
+    for k in ("merged", "unmerged", "deque"):
+        v = results["prefix_sum"][k]
+        print(f"  {k:24s} {v['elements_per_s'] / 1e6:10.2f} Melem/s "
+              f"(spawns={v['spawns']})")
+    print(f"  merged speedup vs unmerged: "
+          f"{results['prefix_sum']['merged_speedup_vs_unmerged']:.2f}x")
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}")
+
+    if args.assert_merged_wins:
+        q = results["quicksort"]["merged_speedup_vs_unmerged"]
+        if q < args.min_speedup:
+            print(f"FAIL: merged quicksort slower than unmerged "
+                  f"({q:.2f}x < {args.min_speedup:.2f}x)", file=sys.stderr)
+            return 1
+        s = results["spray"]["merged_speedup_vs_unmerged"]
+        if s < 2.0:
+            print(f"FAIL: merged spawn+execute spray below 2x unmerged "
+                  f"({s:.2f}x)", file=sys.stderr)
+            return 1
+        print(f"OK: merged quicksort >= unmerged ({q:.2f}x, threshold "
+              f"{args.min_speedup:.2f}x); merged spray {s:.2f}x >= 2x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

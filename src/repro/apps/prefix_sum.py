@@ -19,7 +19,7 @@ from typing import Optional
 import numpy as np
 
 from ..core import (BaseStrategy, SchedulerConfig, StrategyScheduler,
-                    WorkStealingScheduler, spawn_s)
+                    WorkStealingScheduler, spawn_many, spawn_s)
 
 __all__ = ["PrefixStrategy", "run_prefix_sum", "run_concurrent_prefix_sums"]
 
@@ -91,7 +91,15 @@ def _block_task(s: _State, i: int):
             s.processed[i] = True
 
 
-def _root(s: _State, use_strategy: bool, owner_place: int):
+def _root(s: _State, use_strategy: bool, owner_place: int,
+          merge: bool = True):
+    if use_strategy and merge:
+        # Batch-spawn with dynamic merging: consecutive blocks coalesce into
+        # chunk tasks (ascending runs keep the sequential front moving), the
+        # chunk ordered where its first block would be.
+        spawn_many(_block_task, [(s, i) for i in range(s.nblocks)],
+                   strategy_fn=lambda _s, i: PrefixStrategy(i, owner_place))
+        return
     for i in range(s.nblocks):
         strat = (PrefixStrategy(i, owner_place) if use_strategy
                  else BaseStrategy())
@@ -113,7 +121,7 @@ def _finalize(s: _State):
 
 def run_prefix_sum(n: int = 1_000_000, block: int = 4096, seed: int = 0,
                    num_places: int = 4, scheduler: str = "strategy",
-                   use_strategy: bool = True,
+                   use_strategy: bool = True, merge: bool = True,
                    x: Optional[np.ndarray] = None) -> dict:
     rng = np.random.default_rng(seed)
     if x is None:
@@ -126,7 +134,7 @@ def run_prefix_sum(n: int = 1_000_000, block: int = 4096, seed: int = 0,
         sched = StrategyScheduler(num_places=num_places,
                                   config=SchedulerConfig(seed=seed))
     t0 = time.perf_counter()
-    sched.run(_root, s, use_strategy, 0)
+    sched.run(_root, s, use_strategy, 0, merge)
     _finalize(s)
     dt = time.perf_counter() - t0
     t1 = time.perf_counter()
@@ -137,7 +145,8 @@ def run_prefix_sum(n: int = 1_000_000, block: int = 4096, seed: int = 0,
     return {"time_s": dt, "seq_time_s": seq_dt,
             "one_pass_fraction": s.one_pass / s.nblocks,
             "nblocks": s.nblocks, "steals": m["steals"],
-            "spawns": m["spawns"]}
+            "spawns": m["spawns"], "merge_chunks": m["merge_chunks"],
+            "tasks_merged": m["tasks_merged"]}
 
 
 def run_concurrent_prefix_sums(k: int = 12, n: int = 200_000,

@@ -15,7 +15,7 @@ import time
 import numpy as np
 
 from ..core import (BaseStrategy, SchedulerConfig, StrategyScheduler,
-                    WorkStealingScheduler, spawn_s)
+                    WorkStealingScheduler, spawn_many, spawn_s)
 
 __all__ = ["QuicksortStrategy", "run_quicksort"]
 
@@ -47,9 +47,10 @@ class QuicksortStrategy(BaseStrategy):
         return super().steal_prioritize(other)
 
 
-def _qsort_task(a: np.ndarray, lo: int, hi: int, use_strategy: bool):
+def _qsort_task(a: np.ndarray, lo: int, hi: int, use_strategy: bool,
+                cutoff: int = _CUTOFF, merge: bool = True):
     n = hi - lo
-    if n <= _CUTOFF:
+    if n <= cutoff:
         a[lo:hi].sort()
         return
     seg = a[lo:hi]
@@ -62,17 +63,26 @@ def _qsort_task(a: np.ndarray, lo: int, hi: int, use_strategy: bool):
     seg[len(left) + len(mid):] = right
     l_lo, l_hi = lo, lo + len(left)
     r_lo, r_hi = lo + len(left) + len(mid), hi
-    for (s_lo, s_hi) in ((l_lo, l_hi), (r_lo, r_hi)):
-        if s_hi - s_lo <= 0:
-            continue
-        strat = (QuicksortStrategy(s_hi - s_lo) if use_strategy
-                 else BaseStrategy())
-        spawn_s(strat, _qsort_task, a, s_lo, s_hi, use_strategy)
+    subs = [(a, s_lo, s_hi, use_strategy, cutoff, merge)
+            for (s_lo, s_hi) in ((l_lo, l_hi), (r_lo, r_hi))
+            if s_hi - s_lo > 0]
+    if use_strategy and merge:
+        # Both children merge into one chunk task once the local queue
+        # already holds enough parallelism — half the queue churn per node.
+        spawn_many(_qsort_task, subs,
+                   strategy_fn=lambda _a, s_lo, s_hi, *_rest:
+                       QuicksortStrategy(s_hi - s_lo, block=cutoff))
+        return
+    for args in subs:
+        strat = (QuicksortStrategy(args[2] - args[1], block=cutoff)
+                 if use_strategy else BaseStrategy())
+        spawn_s(strat, _qsort_task, *args)
 
 
 def run_quicksort(n: int = 2_000_000, seed: int = 0, num_places: int = 4,
                   scheduler: str = "strategy",
-                  use_strategy: bool = True) -> dict:
+                  use_strategy: bool = True, merge: bool = True,
+                  cutoff: int = _CUTOFF) -> dict:
     rng = np.random.default_rng(seed)
     a = rng.integers(0, 1 << 40, n).astype(np.int64)
     ref = np.sort(a)
@@ -83,11 +93,13 @@ def run_quicksort(n: int = 2_000_000, seed: int = 0, num_places: int = 4,
         sched = StrategyScheduler(num_places=num_places,
                                   config=SchedulerConfig(seed=seed))
     t0 = time.perf_counter()
-    sched.run(_qsort_task, a, 0, n, use_strategy)
+    sched.run(_qsort_task, a, 0, n, use_strategy, cutoff, merge)
     dt = time.perf_counter() - t0
     assert np.array_equal(a, ref), "quicksort output not sorted"
     m = sched.metrics.snapshot()
     return {"time_s": dt, "spawns": m["spawns"],
             "calls_converted": m["calls_converted"], "steals": m["steals"],
             "tasks_stolen": m["tasks_stolen"],
-            "weight_stolen": m["weight_stolen"]}
+            "weight_stolen": m["weight_stolen"],
+            "merge_chunks": m["merge_chunks"],
+            "tasks_merged": m["tasks_merged"]}

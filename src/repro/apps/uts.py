@@ -16,7 +16,7 @@ import time
 import numpy as np
 
 from ..core import (BaseStrategy, SchedulerConfig, StrategyScheduler,
-                    WorkStealingScheduler, get_place, spawn_s)
+                    WorkStealingScheduler, get_place, spawn_many, spawn_s)
 
 __all__ = ["UTSStrategy", "run_uts", "uts_tree_size"]
 
@@ -58,10 +58,21 @@ class UTSStrategy(BaseStrategy):
 
 
 def _uts_task(counts: np.ndarray, h: int, depth: int, b0: float,
-              max_depth: int, use_strategy: bool):
+              max_depth: int, use_strategy: bool, merge: bool = True):
     place = get_place() or 0
     counts[place] += 1
     k = _num_children(h, depth, b0, max_depth)
+    if k == 0:
+        return
+    if use_strategy and merge:
+        # All children share one strategy shape; runs of siblings coalesce
+        # into chunk tasks when the local queue is already deep.
+        spawn_many(
+            _uts_task,
+            [(counts, _splitmix64(h ^ (c + 1)), depth + 1, b0, max_depth,
+              use_strategy, merge) for c in range(k)],
+            strategy_fn=lambda *_a: UTSStrategy(depth + 1, max_depth))
+        return
     for c in range(k):
         ch = _splitmix64(h ^ (c + 1))
         strat = (UTSStrategy(depth + 1, max_depth) if use_strategy
@@ -72,7 +83,7 @@ def _uts_task(counts: np.ndarray, h: int, depth: int, b0: float,
 
 def run_uts(b0: float = 4.0, max_depth: int = 13, seed: int = 42,
             num_places: int = 4, scheduler: str = "strategy",
-            use_strategy: bool = True) -> dict:
+            use_strategy: bool = True, merge: bool = True) -> dict:
     if scheduler == "deque":
         sched = WorkStealingScheduler(num_places=num_places, seed=seed)
         use_strategy = False
@@ -82,13 +93,16 @@ def run_uts(b0: float = 4.0, max_depth: int = 13, seed: int = 42,
     counts = np.zeros(num_places, np.int64)
     root_h = _splitmix64(seed)
     t0 = time.perf_counter()
-    sched.run(_uts_task, counts, root_h, 0, b0, max_depth, use_strategy)
+    sched.run(_uts_task, counts, root_h, 0, b0, max_depth, use_strategy,
+              merge)
     dt = time.perf_counter() - t0
     m = sched.metrics.snapshot()
     nodes = int(counts.sum())
     return {"nodes": nodes, "time_s": dt, "spawns": m["spawns"],
             "calls_converted": m["calls_converted"],
             "queue_churn": 2 * m["spawns"], "steals": m["steals"],
+            "merge_chunks": m["merge_chunks"],
+            "tasks_merged": m["tasks_merged"],
             "nodes_per_s": nodes / max(dt, 1e-9)}
 
 

@@ -27,6 +27,7 @@ import numpy as np
 from ..core.device.request_scheduler import (ContinuousBatcher, Request,
                                              RequestState)
 from ..core.machine import MachineModel
+from ..core.strategy import MergePolicy
 from .replica import Replica, StolenItem
 from .router import ClusterRouter, StealPolicy
 from .telemetry import ClusterTelemetry
@@ -68,12 +69,14 @@ class SimReplica(Replica):
 
     def __init__(self, replica_id: int, clock: SimClock,
                  service: Optional[ServiceModel] = None, slots: int = 4,
-                 place: Optional[int] = None):
+                 place: Optional[int] = None,
+                 merge_policy: Optional[MergePolicy] = None):
         super().__init__(replica_id, place)
         self.clock = clock
         self.service = service or ServiceModel()
         self.slots = slots
-        self.batcher = ContinuousBatcher(max_batch=slots, now=clock.now)
+        self.batcher = ContinuousBatcher(max_batch=slots, now=clock.now,
+                                         merge_policy=merge_policy)
         self.active = 0
         self.sim: Optional["Simulation"] = None   # bound by Simulation
 
@@ -264,6 +267,7 @@ def run_cluster_sim(num_replicas: int, num_requests: int,
                     service: Optional[ServiceModel] = None,
                     machine: Optional[MachineModel] = None,
                     steal_interval: Optional[float] = 0.25,
+                    merge_policy: Optional[MergePolicy] = None,
                     seed: int = 0) -> ClusterTelemetry:
     """Build a simulated cluster, push a synthetic workload through the
     shared router policy code, return the telemetry."""
@@ -271,7 +275,8 @@ def run_cluster_sim(num_replicas: int, num_requests: int,
     classes = tuple(classes) if classes is not None else \
         default_workload(size_dist=size_dist, pareto_alpha=pareto_alpha)
     clock = SimClock()
-    replicas = [SimReplica(i, clock, service, slots=slots)
+    replicas = [SimReplica(i, clock, service, slots=slots,
+                           merge_policy=merge_policy)
                 for i in range(num_replicas)]
     telemetry = ClusterTelemetry(num_replicas)
     router = ClusterRouter(replicas, machine=machine, policy=policy,

@@ -2,13 +2,14 @@
 # configurable, composable, per-task scheduling strategies, plus the
 # device-level (JAX/TPU) adaptations of the same decision procedures.
 from .machine import MachineModel, flat_machine, pod_machine
-from .metrics import SchedulerMetrics
+from .metrics import SchedulerMetrics, WorkerMetrics
 from .scheduler import (
     SchedulerConfig,
     StrategyScheduler,
     WorkStealingScheduler,
     finish,
     spawn,
+    spawn_many,
     spawn_s,
 )
 from .strategy import (
@@ -16,6 +17,8 @@ from .strategy import (
     DepthFirstStrategy,
     FifoStrategy,
     LifoFifoStrategy,
+    MergePolicy,
+    MergingStrategy,
     PriorityStrategy,
     RandomStealStrategy,
     get_place,
@@ -28,10 +31,11 @@ from .task_storage import DequeTaskStorage, StrategyTaskStorage
 
 __all__ = [
     "MachineModel", "flat_machine", "pod_machine",
-    "SchedulerMetrics",
+    "SchedulerMetrics", "WorkerMetrics",
     "SchedulerConfig", "StrategyScheduler", "WorkStealingScheduler",
-    "finish", "spawn", "spawn_s",
+    "finish", "spawn", "spawn_many", "spawn_s",
     "BaseStrategy", "DepthFirstStrategy", "FifoStrategy", "LifoFifoStrategy",
+    "MergePolicy", "MergingStrategy",
     "PriorityStrategy", "RandomStealStrategy", "get_place",
     "local_before", "lowest_common_ancestor", "steal_before",
     "FinishRegion", "Task", "TaskState",

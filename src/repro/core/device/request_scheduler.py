@@ -25,7 +25,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..strategy import PriorityStrategy
+from ..strategy import MergePolicy, PriorityStrategy
 
 __all__ = ["Request", "RequestState", "RequestStrategy", "ContinuousBatcher",
            "BatchPlan", "rebalance_replicas"]
@@ -114,9 +114,15 @@ class ContinuousBatcher:
     slots; ``prefill_token_budget`` is the merged-prefill chunk size."""
 
     def __init__(self, max_batch: int = 32, prefill_token_budget: int = 2048,
-                 now: Callable[[], float] = time.monotonic):
+                 now: Callable[[], float] = time.monotonic,
+                 merge_policy: Optional[MergePolicy] = None):
         self.max_batch = max_batch
         self.prefill_token_budget = prefill_token_budget
+        # The scheduler's task-merging thresholds, reused for request
+        # admission: the merged-prefill chunk grows with waiting-queue depth
+        # (a shallow queue admits prefills one by one — no latency cost for
+        # merging nobody needs).
+        self.merge_policy = merge_policy or MergePolicy()
         self.now = now
         self._waiting: List[_HeapItem] = []
         self.running: Dict[int, Request] = {}
@@ -245,13 +251,20 @@ class ContinuousBatcher:
                     r.finished_at = self.now()
                 plan.evicted.append(self.running.pop(rid))
         # 2. admit waiting requests by strategy priority (dead pruned inline)
+        # The merged-prefill chunk size follows the shared MergePolicy: the
+        # deeper the waiting queue, the more prefills coalesce per step.
+        max_prefill = self.merge_policy.chunk_size(self.waiting_count,
+                                                   self.max_batch)
         while len(self.running) + len(plan.prefill) < self.max_batch:
             req = self._pop_waiting()
             if req is None:
                 break
             if req.prompt_len - req.prefilled > 0:
-                if plan.prefill_tokens + (req.prompt_len - req.prefilled) \
-                        > self.prefill_token_budget and plan.prefill:
+                if plan.prefill and (
+                        len(plan.prefill) >= max_prefill
+                        or plan.prefill_tokens
+                        + (req.prompt_len - req.prefilled)
+                        > self.prefill_token_budget):
                     # chunk full; leave for next step
                     self.submit(req)
                     break

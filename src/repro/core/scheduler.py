@@ -17,6 +17,12 @@ terminates as soon as half the victim's *work* (sum of transitive weights)
 has been transferred — for divide-and-conquer weights this often means one
 task instead of half the task count.
 
+Task merging: ``spawn_many`` coalesces runs of small same-strategy spawns
+into single chunk tasks executed as a loop (the paper's dynamic
+task-merging optimization); the chunk size follows the config's
+:class:`~repro.core.strategy.MergePolicy`, growing with local queue depth so
+merging never starves thieves of parallelism.
+
 The baseline :class:`WorkStealingScheduler` uses Arora-style deques
 (LIFO/FIFO, steal one) and ignores strategies, matching the paper's
 "standard work-stealing" comparison bar.
@@ -27,11 +33,12 @@ import random
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, List, Optional
+from typing import Any, Callable, List, Optional, Sequence
 
 from .machine import MachineModel, flat_machine
 from .metrics import SchedulerMetrics
-from .strategy import BaseStrategy, _register_place_getter
+from .strategy import (BaseStrategy, MergePolicy, MergingStrategy,
+                       _register_place_getter)
 from .task import FinishRegion, Task, TaskState
 from .task_storage import DequeTaskStorage, StrategyTaskStorage
 
@@ -43,6 +50,12 @@ def _current_worker() -> Optional["_Worker"]:
 
 
 _register_place_getter(lambda: (w.place_id if (w := _current_worker()) else None))
+
+
+def _run_chunk(fn: Callable, chunk: Sequence[tuple]) -> None:
+    """Body of a merged chunk task: run the coalesced spawns as a loop."""
+    for args in chunk:
+        fn(*args)
 
 
 @dataclass
@@ -62,6 +75,9 @@ class SchedulerConfig:
     max_call_depth: int = 200
     #: visit steal victims nearest-first in the machine tree.
     steal_nearest_first: bool = True
+    #: dynamic task-merging thresholds for ``spawn_many`` (queue-depth
+    #: driven; ``MergePolicy(max_chunk=1)`` disables merging).
+    merge_policy: MergePolicy = field(default_factory=MergePolicy)
     idle_sleep_s: float = 20e-6
     seed: int = 0
 
@@ -81,6 +97,10 @@ class _Worker:
         self.rng = random.Random((cfg.seed << 16) ^ place_id)
         self.call_depth = 0
         self.thread: Optional[threading.Thread] = None
+        #: private unlocked metrics shard — this worker is the only writer,
+        #: so the hot path bumps plain ints instead of taking the global
+        #: metrics lock on every execute/spawn/steal.
+        self.m = sched.metrics.register_worker()
 
     # -- execution --------------------------------------------------------
     def execute(self, task: Task) -> None:
@@ -88,7 +108,7 @@ class _Worker:
         if task.strategy.is_dead():
             # Claimed tasks may die between claim and run; prune here too.
             task.state = TaskState.DEAD
-            sched.metrics.add(dead_pruned=1)
+            self.m.dead_pruned += 1
             task.region.dec()
             return
         prev_region = getattr(_tls, "region", None)
@@ -100,7 +120,7 @@ class _Worker:
         finally:
             _tls.region = prev_region
             task.state = TaskState.DONE
-            sched.metrics.add(tasks_executed=1)
+            self.m.tasks_executed += 1
             task.region.dec()
 
     def try_execute_one(self) -> bool:
@@ -202,7 +222,7 @@ class StrategyScheduler:
                 and strategy.transitive_weight
                 <= cfg.call_threshold(worker.storage.ready_count)):
             # Spawn-to-call: execute inline, no queue traffic.
-            self.metrics.add(calls_converted=1)
+            worker.m.calls_converted += 1
             worker.call_depth += 1
             try:
                 fn(*args, **kwargs)
@@ -212,8 +232,89 @@ class StrategyScheduler:
         region.inc()
         task = Task(fn, args, kwargs, strategy, region)
         worker.storage.push(task)
-        self.metrics.add(spawns=1)
-        self.metrics.observe_queue_len(worker.storage.ready_count)
+        m = worker.m
+        m.spawns += 1
+        qlen = worker.storage.ready_count
+        if qlen > m.max_queue_len:
+            m.max_queue_len = qlen
+
+    def spawn_many(self, fn: Callable, args_list: Sequence[tuple], *,
+                   strategy_fn: Optional[Callable[..., BaseStrategy]] = None,
+                   policy: Optional[MergePolicy] = None) -> None:
+        """Batch-spawn ``fn(*args)`` for every ``args`` in ``args_list``,
+        dynamically merging runs of consecutive spawns into single chunk
+        tasks executed as a loop (the paper's task-merging optimization).
+
+        ``strategy_fn(*args)`` builds the strategy for one item (defaults
+        to :class:`BaseStrategy`).  A merged chunk adopts its *first* item's
+        strategy as representative — ordering, locality and deadness follow
+        it — with transitive weight estimated as ``rep.weight * len(chunk)``.
+        Chunk sizes follow ``policy`` (default: the scheduler config's):
+        nothing is merged while the local queue is shallow (parallelism is
+        still needed); deep queues coalesce up to ``max_chunk`` spawns into
+        one push+pop.  Spawn-to-call composes at chunk granularity: a chunk
+        whose representative opts in and whose estimated weight is at or
+        below the call threshold runs inline as a loop — merging never
+        forfeits the conversion optimization.  On the deque baseline this
+        degrades to per-item spawns, keeping the comparison bar honest."""
+        n = len(args_list)
+        if n == 0:
+            return
+        worker = _current_worker()
+        if worker is None or worker.sched is not self:
+            raise RuntimeError("spawn_many must be called from inside a task")
+        cfg = self.config
+        if policy is None:
+            policy = cfg.merge_policy
+        if cfg.storage != "strategy" or policy.max_chunk <= 1 or n == 1:
+            for args in args_list:
+                self.spawn_s(
+                    strategy_fn(*args) if strategy_fn else BaseStrategy(),
+                    fn, *args)
+            return
+        storage = worker.storage
+        region: FinishRegion = getattr(_tls, "region")
+        m = worker.m
+        convert = cfg.call_conversion
+        threshold = cfg.call_threshold
+        i = 0
+        while i < n:
+            qdepth = storage.ready_count
+            c = policy.chunk_size(qdepth, n - i)
+            if c <= 1:
+                self.spawn_s(
+                    strategy_fn(*args_list[i]) if strategy_fn
+                    else BaseStrategy(),
+                    fn, *args_list[i])
+                i += 1
+                continue
+            chunk = args_list[i:i + c]
+            i += c
+            rep = (strategy_fn(*chunk[0]) if strategy_fn
+                   else BaseStrategy())
+            if rep.place is None:
+                rep.place = worker.place_id
+            strat = MergingStrategy(rep, merged_count=c)
+            if (convert
+                    and rep.allow_call_conversion()
+                    and worker.call_depth < cfg.max_call_depth
+                    and strat.transitive_weight <= threshold(qdepth)):
+                # Chunk-granular spawn-to-call: run the whole run inline.
+                m.calls_converted += c
+                worker.call_depth += 1
+                try:
+                    _run_chunk(fn, chunk)
+                finally:
+                    worker.call_depth -= 1
+                continue
+            region.inc()
+            storage.push(Task(_run_chunk, (fn, chunk), {}, strat, region))
+            m.spawns += 1
+            m.merge_chunks += 1
+            m.tasks_merged += c
+        qlen = storage.ready_count
+        if qlen > m.max_queue_len:
+            m.max_queue_len = qlen
 
     def finish(self) -> "_FinishCtx":
         """``with sched.finish(): spawn(...)`` — returns once every task
@@ -230,13 +331,15 @@ class StrategyScheduler:
             victim = self.workers[victim_id]
             if victim.storage.ready_count == 0:
                 continue
-            self.metrics.add(steal_attempts=1)
+            thief.m.steal_attempts += 1
             stolen, weight = victim.storage.steal_batch(
                 thief.place_id, half_work=cfg.steal_half_work)
             if not stolen:
                 continue
-            self.metrics.add(steals=1, tasks_stolen=len(stolen),
-                             weight_stolen=weight)
+            m = thief.m
+            m.steals += 1
+            m.tasks_stolen += len(stolen)
+            m.weight_stolen += weight
             # Execute the highest-steal-priority task now; re-home the rest.
             # Note: strategy.place stays the original spawn place (the
             # paper's default), so locality-aware strategies still see where
@@ -249,7 +352,11 @@ class StrategyScheduler:
         return False
 
     def _on_prune(self, task: Task) -> None:
-        self.metrics.add(dead_pruned=1)
+        w = _current_worker()
+        if w is not None and w.sched is self:
+            w.m.dead_pruned += 1
+        else:
+            self.metrics.add(dead_pruned=1)
         task.region.dec()
 
     def _set_error(self, exc: BaseException) -> None:
@@ -315,6 +422,15 @@ def spawn_s(strategy: BaseStrategy, fn: Callable, *args, **kwargs) -> None:
     if w is None:
         raise RuntimeError("spawn_s outside scheduler")
     w.sched.spawn_s(strategy, fn, *args, **kwargs)
+
+
+def spawn_many(fn: Callable, args_list: Sequence[tuple], *,
+               strategy_fn: Optional[Callable[..., BaseStrategy]] = None,
+               policy: Optional[MergePolicy] = None) -> None:
+    w = _current_worker()
+    if w is None:
+        raise RuntimeError("spawn_many outside scheduler")
+    w.sched.spawn_many(fn, args_list, strategy_fn=strategy_fn, policy=policy)
 
 
 def finish() -> _FinishCtx:

@@ -29,6 +29,8 @@ __all__ = [
     "PriorityStrategy",
     "DepthFirstStrategy",
     "RandomStealStrategy",
+    "MergePolicy",
+    "MergingStrategy",
     "lowest_common_ancestor",
     "local_before",
     "steal_before",
@@ -184,6 +186,82 @@ class DepthFirstStrategy(BaseStrategy):
 
 
 # --------------------------------------------------------------------------
+# Dynamic task merging (the paper's task-merging optimization)
+# --------------------------------------------------------------------------
+
+class MergePolicy:
+    """Merge-threshold policy shared by the scheduler's ``spawn_many`` and
+    the serving batcher's request admission: how many consecutive small
+    spawns (or prefills) to coalesce into one unit, given how much
+    parallelism the local queue already holds.
+
+    An empty queue means every spawned task may be needed for parallelism,
+    so nothing is merged; once ``queue_depth`` tasks are already queued,
+    coalescing up to ``depth_factor * queue_depth`` (capped at
+    ``max_chunk``) spawns into a single looped task trades parallelism
+    nobody would have consumed for far less queue churn."""
+
+    __slots__ = ("min_chunk", "max_chunk", "depth_factor")
+
+    def __init__(self, min_chunk: int = 1, max_chunk: int = 64,
+                 depth_factor: float = 1.0):
+        self.min_chunk = max(1, int(min_chunk))
+        self.max_chunk = max(1, int(max_chunk))
+        self.depth_factor = depth_factor
+
+    def chunk_size(self, queue_depth: int, remaining: int) -> int:
+        """Units to coalesce given ``queue_depth`` ready units already
+        queued locally and ``remaining`` units still to enqueue."""
+        c = int(queue_depth * self.depth_factor)
+        if c < self.min_chunk:
+            c = self.min_chunk
+        elif c > self.max_chunk:
+            c = self.max_chunk
+        return c if c < remaining else remaining
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return (f"MergePolicy(min_chunk={self.min_chunk}, "
+                f"max_chunk={self.max_chunk}, "
+                f"depth_factor={self.depth_factor})")
+
+
+class MergingStrategy(BaseStrategy):
+    """Strategy of a merged chunk task (``spawn_many``): carries the
+    *representative* strategy of the coalesced run (its first task's) plus
+    the number of merged spawns and their summed transitive weight.
+
+    Ordering is fully delegated to the representative:
+    :func:`local_before`/:func:`steal_before` unwrap a ``MergingStrategy``
+    to ``rep`` before comparing, and task storage groups chunk tasks under
+    ``type(rep)`` — so a chunk of e.g. ascending-block prefix-sum tasks
+    sorts among unmerged blocks exactly where its first block would, and a
+    single-strategy-type workload stays on the homogeneous fast path."""
+
+    __slots__ = ("rep", "merged_count")
+
+    def __init__(self, rep: BaseStrategy, merged_count: int,
+                 total_weight: Optional[int] = None):
+        super().__init__(
+            transitive_weight=(total_weight if total_weight is not None
+                               else rep.transitive_weight * merged_count),
+            place=rep.place)
+        self.rep = rep
+        self.merged_count = merged_count
+
+    def allow_call_conversion(self) -> bool:
+        return False          # a chunk is already batched work
+
+    def is_dead(self) -> bool:
+        return self.rep.is_dead()
+
+    def prioritize(self, other: BaseStrategy) -> bool:
+        return local_before(self.rep, other)
+
+    def steal_prioritize(self, other: BaseStrategy) -> bool:
+        return steal_before(self.rep, other)
+
+
+# --------------------------------------------------------------------------
 # Composition machinery
 # --------------------------------------------------------------------------
 
@@ -200,29 +278,37 @@ def lowest_common_ancestor(a: type, b: type) -> type:
     return BaseStrategy
 
 
-def _compare_via(cls: type, a: BaseStrategy, b: BaseStrategy, steal: bool) -> bool:
-    fn = cls.steal_prioritize if steal else cls.prioritize
-    return fn(a, b)
-
-
 def local_before(a: BaseStrategy, b: BaseStrategy) -> bool:
     """Total local-execution order across arbitrary strategy types.
 
-    Same concrete type → that type's ``prioritize`` (children overrule
-    ancestors).  Different types → the LCA type's ``prioritize`` applied to
-    both instances (every strategy carries the base fields the ancestor
+    Merged chunks compare as their representative strategy.  Same concrete
+    type → that type's ``prioritize`` (children overrule ancestors).
+    Different types → the LCA type's ``prioritize`` applied to both
+    instances (every strategy carries the base fields the ancestor
     comparisons need)."""
     ta, tb = type(a), type(b)
+    if ta is MergingStrategy:
+        a = a.rep
+        ta = type(a)
+    if tb is MergingStrategy:
+        b = b.rep
+        tb = type(b)
     cls = ta if ta is tb else lowest_common_ancestor(ta, tb)
-    return _compare_via(cls, a, b, steal=False)
+    return cls.prioritize(a, b)
 
 
 def steal_before(a: BaseStrategy, b: BaseStrategy) -> bool:
     """Total steal order across arbitrary strategy types (see
     :func:`local_before`)."""
     ta, tb = type(a), type(b)
+    if ta is MergingStrategy:
+        a = a.rep
+        ta = type(a)
+    if tb is MergingStrategy:
+        b = b.rep
+        tb = type(b)
     cls = ta if ta is tb else lowest_common_ancestor(ta, tb)
-    return _compare_via(cls, a, b, steal=True)
+    return cls.steal_prioritize(a, b)
 
 
 # --------------------------------------------------------------------------

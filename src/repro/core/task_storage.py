@@ -10,13 +10,30 @@ Two implementations:
   implementation is fine-grained-locked rather than lock-free — the lock-free
   variant was out of the paper's scope as well).
 
-  Composability: tasks are grouped per concrete strategy type; each group is
-  a heap in that type's order; the storage-wide head is picked by comparing
-  group heads under the lowest-common-ancestor strategy (children overrule
-  ancestors).
+  Composability: tasks are grouped per concrete strategy type (merged chunks
+  group under their representative's type); each group is a heap in that
+  type's order; the storage-wide head is picked by comparing group heads
+  under the lowest-common-ancestor strategy (children overrule ancestors).
+
+  Hot-path fast paths (this is the scheduler's innermost loop):
+
+  - **homogeneous mode** — while only one strategy type is live, push and
+    pop skip the group dict lookup and the cross-group LCA comparison
+    entirely (one cached group pointer, one heap op);
+  - **item freelists** — ``_OwnerItem``/``_StealItem`` wrappers are slot
+    objects recycled through per-storage freelists instead of being
+    reallocated on every push/refresh;
+  - **incremental steal views** — the push log carries monotone sequence
+    numbers, so ``_compact`` just drops stale log entries; stealer views
+    keep their heaps (stale items are skipped lazily at pop time) and are
+    only filtered/re-heapified when they are mostly garbage, instead of
+    being rebuilt from scratch on every compaction.
 
 * :class:`DequeTaskStorage` — baseline Arora-style work-stealing deque:
-  owner LIFO, stealer FIFO, oblivious to strategies.
+  owner LIFO, stealer FIFO, oblivious to strategies.  Keeps O(1) live
+  ``ready_count``/``ready_weight`` counters (entries whose task is observed
+  no longer READY are discounted as they are discarded), so steal probes
+  don't chase queues holding only stale entries.
 
 A task resides in exactly one storage; its ``state`` changes only under that
 storage's lock, so steal-view entries that went stale (task executed, stolen
@@ -26,19 +43,26 @@ from __future__ import annotations
 
 import heapq
 import threading
+from bisect import bisect_left
 from collections import deque
 from typing import Callable, Dict, List, Optional, Tuple
 
-from .strategy import BaseStrategy, local_before, steal_before, lowest_common_ancestor
+from .strategy import MergingStrategy, local_before, steal_before
 from .task import Task, TaskState
 
 PruneCallback = Callable[[Task], None]
+
+#: compact the push log once it exceeds this length and is ≥ 3/4 stale.
+_COMPACT_LOG_LEN = 256
+#: filter a steal-view heap only when it is this many times larger than the
+#: live task count (rare; the common compaction leaves views untouched).
+_VIEW_GC_FACTOR = 4
 
 
 class _OwnerItem:
     __slots__ = ("task",)
 
-    def __init__(self, task: Task):
+    def __init__(self, task: Optional[Task]):
         self.task = task
 
     def __lt__(self, other: "_OwnerItem") -> bool:
@@ -48,7 +72,7 @@ class _OwnerItem:
 class _StealItem:
     __slots__ = ("task",)
 
-    def __init__(self, task: Task):
+    def __init__(self, task: Optional[Task]):
         self.task = task
 
     def __lt__(self, other: "_StealItem") -> bool:
@@ -56,7 +80,9 @@ class _StealItem:
 
 
 class _StealView:
-    """Lazily evaluated steal-priority view cached per stealer place."""
+    """Lazily evaluated steal-priority view cached per stealer place.
+    ``watermark`` is a push *sequence number* (not a log index), so
+    compacting the log never invalidates it."""
 
     __slots__ = ("watermark", "heap")
 
@@ -65,20 +91,39 @@ class _StealView:
         self.heap: List[_StealItem] = []
 
 
+def _group_type(task: Task) -> type:
+    """Grouping key: merged chunks live in their representative's group so
+    chunk order composes with unmerged tasks of the same strategy (and a
+    merged single-strategy workload stays homogeneous)."""
+    strategy = task.strategy
+    t = type(strategy)
+    if t is MergingStrategy:
+        return type(strategy.rep)
+    return t
+
+
 class StrategyTaskStorage:
     def __init__(self, place_id: int, on_prune: Optional[PruneCallback] = None):
         self.place_id = place_id
         self._lock = threading.Lock()
         self._groups: Dict[type, List[_OwnerItem]] = {}
+        # Homogeneous fast path: while exactly one group exists, push/pop
+        # bypass the dict and the cross-group comparison.
+        self._sole_type: Optional[type] = None
+        self._sole_group: Optional[List[_OwnerItem]] = None
         self._log: List[Task] = []          # append-only push log for stealers
+        self._log_seq: List[int] = []       # parallel monotone sequence nums
+        self._push_seq = 0
         self._views: Dict[int, _StealView] = {}
         self._ready = 0
         self._ready_weight = 0
         self._on_prune = on_prune
+        self._owner_free: List[_OwnerItem] = []
+        self._steal_free: List[_StealItem] = []
 
     # -- helpers (hold lock) ------------------------------------------------
     def _resident(self, task: Task) -> bool:
-        return task.state == TaskState.READY and getattr(task, "_storage", None) is self
+        return task.state == TaskState.READY and task._storage is self
 
     def _claim(self, task: Task) -> None:
         task.state = TaskState.CLAIMED
@@ -92,49 +137,89 @@ class StrategyTaskStorage:
         if self._on_prune is not None:
             self._on_prune(task)
 
-    def _valid_head(self, heap, steal: bool) -> Optional[Task]:
+    def _valid_head(self, heap: list, free: list) -> Optional[Task]:
         """Pop stale/dead entries until the head is a live resident task (or
         the heap empties).  Dead tasks are pruned on sight — the paper's
-        'removed early and will not be stolen'."""
+        'removed early and will not be stolen'.  Discarded wrappers are
+        recycled through ``free``."""
         while heap:
-            task = heap[0].task
+            item = heap[0]
+            task = item.task
             if not self._resident(task):
                 heapq.heappop(heap)
+                item.task = None
+                free.append(item)
                 continue
             if task.strategy.is_dead():
                 heapq.heappop(heap)
+                item.task = None
+                free.append(item)
                 self._prune(task)
                 continue
             return task
         return None
+
+    def _recycle_owner(self, item: _OwnerItem) -> None:
+        item.task = None
+        self._owner_free.append(item)
 
     # -- owner API -----------------------------------------------------------
     def push(self, task: Task) -> None:
         with self._lock:
             task._storage = self
             task.state = TaskState.READY
-            group = self._groups.get(type(task.strategy))
-            if group is None:
-                group = self._groups[type(task.strategy)] = []
-            heapq.heappush(group, _OwnerItem(task))
+            t = _group_type(task)
+            if t is self._sole_type:
+                group = self._sole_group           # homogeneous fast path
+            else:
+                group = self._groups.get(t)
+                if group is None:
+                    group = self._groups[t] = []
+                if len(self._groups) == 1:
+                    self._sole_type, self._sole_group = t, group
+                else:
+                    self._sole_type = self._sole_group = None
+            free = self._owner_free
+            if free:
+                item = free.pop()
+                item.task = task
+            else:
+                item = _OwnerItem(task)
+            heapq.heappush(group, item)
             self._log.append(task)
+            self._log_seq.append(self._push_seq)
+            self._push_seq += 1
             self._ready += 1
             self._ready_weight += task.strategy.transitive_weight
 
     def pop_local(self) -> Optional[Task]:
         with self._lock:
+            group = self._sole_group
+            if group is not None:
+                # Homogeneous fast path: no dict scan, no LCA comparison.
+                task = self._valid_head(group, self._owner_free)
+                if task is None:
+                    return None
+                self._recycle_owner(heapq.heappop(group))
+                self._claim(task)
+                return task
             best_task: Optional[Task] = None
             best_group = None
-            for group in self._groups.values():
-                head = self._valid_head(group, steal=False)
+            for t in list(self._groups):
+                g = self._groups[t]
+                head = self._valid_head(g, self._owner_free)
                 if head is None:
+                    if not g:
+                        del self._groups[t]     # retired strategy type
                     continue
                 if best_task is None or local_before(head.strategy,
                                                      best_task.strategy):
-                    best_task, best_group = head, group
+                    best_task, best_group = head, g
+            if len(self._groups) == 1:          # collapsed back to one type
+                (self._sole_type, self._sole_group), = self._groups.items()
             if best_task is None:
                 return None
-            heapq.heappop(best_group)
+            self._recycle_owner(heapq.heappop(best_group))
             self._claim(best_task)
             return best_task
 
@@ -143,7 +228,12 @@ class StrategyTaskStorage:
                     max_tasks: Optional[int] = None) -> Tuple[List[Task], int]:
         """Steal in the stealer's (lazily cached) steal-priority order until
         half the *weighted* work has moved (``half_work=True``) or half the
-        task count (``half_work=False``).  Returns (tasks, weight)."""
+        task count (``half_work=False``).  Returns (tasks, weight).
+
+        Either mode moves at most ``max(1, ready // 2)`` tasks per
+        transaction: a degenerate weight distribution (e.g. every task at
+        weight 0, making ``target_weight`` 0) can therefore never drain the
+        victim's whole queue in one steal."""
         with self._lock:
             if self._ready == 0:
                 return [], 0
@@ -151,50 +241,76 @@ class StrategyTaskStorage:
             if view is None:
                 view = self._views[stealer_id] = _StealView()
             # Lazy refresh: only now are newly pushed tasks ordered for this
-            # stealer.
-            log = self._log
-            for i in range(view.watermark, len(log)):
+            # stealer.  The watermark is a sequence number; bisect finds
+            # where the (possibly compacted) log resumes.
+            log, seqs = self._log, self._log_seq
+            start = bisect_left(seqs, view.watermark)
+            heap, free = view.heap, self._steal_free
+            for i in range(start, len(log)):
                 task = log[i]
                 if self._resident(task):
-                    heapq.heappush(view.heap, _StealItem(task))
-            view.watermark = len(log)
+                    if free:
+                        item = free.pop()
+                        item.task = task
+                    else:
+                        item = _StealItem(task)
+                    heapq.heappush(heap, item)
+            view.watermark = self._push_seq
 
-            target_weight = self._ready_weight // 2
+            # Weight target: half the queued work.  Count clamp: never more
+            # than half the queued tasks (min 1), whichever bites first.
+            target_weight = max(1, self._ready_weight // 2)
             target_count = max(1, self._ready // 2)
             if max_tasks is not None:
                 target_count = min(target_count, max_tasks)
 
             stolen: List[Task] = []
             weight = 0
-            while view.heap:
-                task = self._valid_head(view.heap, steal=True)
+            while heap:
+                task = self._valid_head(heap, free)
                 if task is None:
                     break
-                heapq.heappop(view.heap)
+                item = heapq.heappop(heap)
+                item.task = None
+                free.append(item)
                 self._claim(task)
                 stolen.append(task)
                 weight += task.strategy.transitive_weight
                 # Terminate as soon as half the work (by weight) has been
-                # transferred — possibly after a single heavy task — or, in
-                # count mode, after half the tasks.
-                if half_work:
-                    if weight >= target_weight:
-                        break
-                else:
-                    if len(stolen) >= target_count:
-                        break
+                # transferred — possibly after a single heavy task — or
+                # after half the tasks (always, in count mode; as a clamp,
+                # in weight mode).
+                if len(stolen) >= target_count:
+                    break
+                if half_work and weight >= target_weight:
+                    break
             # Compact the log when mostly stale to bound memory.
-            if len(log) > 256 and self._ready < len(log) // 4:
+            if len(log) > _COMPACT_LOG_LEN and self._ready < len(log) // 4:
                 self._compact()
             return stolen, weight
 
     def _compact(self) -> None:
-        live = [t for t in self._log if self._resident(t)]
-        self._log = live
+        """Drop stale entries from the push log.  Sequence numbers make this
+        invisible to stealer views: their watermarks stay valid and their
+        heaps are kept as-is (stale items are skipped lazily) — only a view
+        that is mostly garbage is filtered, and only then re-heapified."""
+        log, seqs = self._log, self._log_seq
+        keep = [i for i, t in enumerate(log) if self._resident(t)]
+        self._log = [log[i] for i in keep]
+        self._log_seq = [seqs[i] for i in keep]
+        free = self._steal_free
         for view in self._views.values():
-            view.watermark = len(live)
-            view.heap = [_StealItem(t) for t in live]
-            heapq.heapify(view.heap)
+            heap = view.heap
+            if len(heap) > 64 and len(heap) > _VIEW_GC_FACTOR * self._ready:
+                live: List[_StealItem] = []
+                for item in heap:
+                    if self._resident(item.task):
+                        live.append(item)
+                    else:
+                        item.task = None
+                        free.append(item)
+                heapq.heapify(live)
+                view.heap = live
 
     # -- introspection ---------------------------------------------------------
     @property
@@ -212,7 +328,10 @@ class StrategyTaskStorage:
 class DequeTaskStorage:
     """Baseline Arora-style deque: owner pops LIFO, thieves take FIFO.
     Strategy-oblivious (priority, weight and deadness are ignored, matching a
-    standard work-stealing scheduler)."""
+    standard work-stealing scheduler).  ``ready_count``/``ready_weight`` are
+    O(1) live counters rather than ``len(deque)``/a full scan: entries whose
+    task turns out to be CLAIMED/DEAD are discounted when discarded, so
+    thieves don't keep probing a victim holding only stale entries."""
 
     def __init__(self, place_id: int, on_prune: Optional[PruneCallback] = None,
                  steal_half_count: bool = False):
@@ -220,17 +339,27 @@ class DequeTaskStorage:
         self._lock = threading.Lock()
         self._dq: deque = deque()
         self._steal_half_count = steal_half_count
+        self._ready = 0
+        self._ready_weight = 0
+
+    def _discard(self, task: Task) -> None:
+        """Account for an entry leaving the deque (claimed or stale)."""
+        self._ready -= 1
+        self._ready_weight -= task.strategy.transitive_weight
 
     def push(self, task: Task) -> None:
         with self._lock:
             task._storage = self
             task.state = TaskState.READY
             self._dq.append(task)
+            self._ready += 1
+            self._ready_weight += task.strategy.transitive_weight
 
     def pop_local(self) -> Optional[Task]:
         with self._lock:
             while self._dq:
                 task = self._dq.pop()
+                self._discard(task)
                 if task.state == TaskState.READY:
                     task.state = TaskState.CLAIMED
                     return task
@@ -240,16 +369,16 @@ class DequeTaskStorage:
                     max_tasks: Optional[int] = None) -> Tuple[List[Task], int]:
         del half_work  # oblivious baseline: steals 1 task (or half the count)
         with self._lock:
-            n = len(self._dq)
-            if n == 0:
+            if self._ready == 0:
                 return [], 0
-            take = max(1, n // 2) if self._steal_half_count else 1
+            take = max(1, self._ready // 2) if self._steal_half_count else 1
             if max_tasks is not None:
                 take = min(take, max_tasks)
             stolen: List[Task] = []
             weight = 0
             while self._dq and len(stolen) < take:
                 task = self._dq.popleft()
+                self._discard(task)
                 if task.state != TaskState.READY:
                     continue
                 task.state = TaskState.CLAIMED
@@ -259,12 +388,11 @@ class DequeTaskStorage:
 
     @property
     def ready_count(self) -> int:
-        return len(self._dq)
+        return self._ready
 
     @property
     def ready_weight(self) -> int:
-        return sum(t.strategy.transitive_weight for t in self._dq
-                   if t.state == TaskState.READY)
+        return self._ready_weight
 
     def __len__(self) -> int:
         return len(self._dq)

@@ -23,6 +23,7 @@ import numpy as np
 
 from ..core.device.request_scheduler import (BatchPlan, ContinuousBatcher,
                                              Request, RequestState)
+from ..core.strategy import MergePolicy
 from ..models.model_zoo import Model
 
 __all__ = ["ServingEngine"]
@@ -31,14 +32,16 @@ __all__ = ["ServingEngine"]
 class ServingEngine:
     def __init__(self, model: Model, params, *, max_batch: int = 4,
                  s_max: int = 128, prefill_token_budget: int = 512,
-                 batch_axis: int = 1, eos_token: Optional[int] = None):
+                 batch_axis: int = 1, eos_token: Optional[int] = None,
+                 merge_policy: Optional[MergePolicy] = None):
         self.model = model
         self.params = params
         self.s_max = s_max
         self.batch_axis = batch_axis
         self.eos = eos_token
         self.batcher = ContinuousBatcher(
-            max_batch=max_batch, prefill_token_budget=prefill_token_budget)
+            max_batch=max_batch, prefill_token_budget=prefill_token_budget,
+            merge_policy=merge_policy)
         self.cache = model.init_cache(max_batch, s_max)
         self.slot_req: List[Optional[Request]] = [None] * max_batch
         self.slot_pos = np.zeros(max_batch, np.int64)

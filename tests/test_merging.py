@@ -1,0 +1,213 @@
+"""Dynamic task merging: MergePolicy, spawn_many, MergingStrategy ordering,
+chunk-granular spawn-to-call, batcher admission reuse, sharded metrics."""
+import pytest
+
+from repro.core import (BaseStrategy, DepthFirstStrategy, FinishRegion,
+                        MergePolicy, MergingStrategy, PriorityStrategy,
+                        SchedulerConfig, SchedulerMetrics, StrategyScheduler,
+                        WorkStealingScheduler, finish, local_before,
+                        spawn_many, steal_before)
+from repro.core.device.request_scheduler import ContinuousBatcher, Request
+from repro.core.task_storage import StrategyTaskStorage
+from repro.core.task import Task
+
+
+# --------------------------------------------------------------------------
+# MergePolicy
+# --------------------------------------------------------------------------
+
+def test_merge_policy_thresholds():
+    p = MergePolicy(min_chunk=1, max_chunk=8, depth_factor=1.0)
+    assert p.chunk_size(0, 100) == 1       # shallow queue: no merging
+    assert p.chunk_size(3, 100) == 3       # grows with queue depth
+    assert p.chunk_size(50, 100) == 8      # capped at max_chunk
+    assert p.chunk_size(50, 5) == 5        # never exceeds remaining work
+    assert p.chunk_size(0, 0) == 0
+
+
+def test_merge_policy_disabled():
+    p = MergePolicy(max_chunk=1)
+    assert p.chunk_size(1000, 1000) == 1
+
+
+# --------------------------------------------------------------------------
+# spawn_many through the scheduler
+# --------------------------------------------------------------------------
+
+def _run_spray(sched, n, strategy_fn=None, policy=None):
+    done = []
+
+    def work(i):
+        done.append(i)
+
+    def root():
+        with finish():
+            spawn_many(work, [(i,) for i in range(n)],
+                       strategy_fn=strategy_fn, policy=policy)
+
+    sched.run(root)
+    return done, sched.metrics.snapshot()
+
+
+def test_spawn_many_executes_everything_merged():
+    sched = StrategyScheduler(num_places=4)
+    done, m = _run_spray(sched, 1000)
+    assert sorted(done) == list(range(1000))
+    assert m["merge_chunks"] > 0
+    assert m["spawns"] < 1000               # chunks replaced most pushes
+    # every item ran exactly once, whether merged, single-spawned, or
+    # chunk-converted inline
+    assert m["tasks_merged"] <= 1000
+
+
+def test_spawn_many_respects_explicit_policy():
+    sched = StrategyScheduler(num_places=1)
+    done, m = _run_spray(sched, 100,
+                         policy=MergePolicy(max_chunk=1))
+    assert sorted(done) == list(range(100))
+    assert m["merge_chunks"] == 0           # merging disabled per-call
+
+
+def test_spawn_many_on_deque_baseline_never_merges():
+    sched = WorkStealingScheduler(num_places=2)
+    done, m = _run_spray(sched, 200)
+    assert sorted(done) == list(range(200))
+    assert m["merge_chunks"] == 0
+
+
+def test_spawn_many_priority_order_single_place():
+    """Merged chunks must still respect the representative's priority order
+    relative to unmerged tasks of the same strategy type."""
+    order = []
+
+    def record(i):
+        order.append(i)
+
+    def root():
+        with finish():
+            spawn_many(record, [(i,) for i in range(50)],
+                       strategy_fn=lambda i: PriorityStrategy(priority=i))
+
+    sched = StrategyScheduler(num_places=1)
+    sched.run(root)
+    assert order == sorted(order)
+
+
+def test_spawn_many_chunk_call_conversion():
+    """Chunks whose representative opts into call conversion run inline when
+    light enough — merging must not forfeit spawn-to-call."""
+    def tree(depth, max_depth):
+        if depth >= max_depth:
+            return
+        spawn_many(tree, [(depth + 1, max_depth)] * 2,
+                   strategy_fn=lambda d, md: DepthFirstStrategy(d, md))
+
+    sched = StrategyScheduler(num_places=2)
+    sched.run(tree, 0, 9)
+    m = sched.metrics.snapshot()
+    assert m["calls_converted"] > 0
+
+
+def test_spawn_many_outside_scheduler_raises():
+    with pytest.raises(RuntimeError):
+        spawn_many(lambda: None, [()])
+
+
+# --------------------------------------------------------------------------
+# MergingStrategy ordering (unwrapped to the representative)
+# --------------------------------------------------------------------------
+
+def test_merging_strategy_orders_as_representative():
+    hi = PriorityStrategy(priority=0.0, place=0)
+    lo = PriorityStrategy(priority=9.0, place=0)
+    chunk_hi = MergingStrategy(hi, merged_count=4)
+    assert local_before(chunk_hi, lo)       # chunk vs plain: rep decides
+    assert not local_before(lo, chunk_hi)
+    chunk_lo = MergingStrategy(lo, merged_count=4)
+    assert local_before(chunk_hi, chunk_lo)  # chunk vs chunk: reps compared
+    assert steal_before(chunk_hi, chunk_lo)
+
+
+def test_merging_strategy_weight_and_deadness():
+    class Dying(BaseStrategy):
+        dead = False
+
+        def is_dead(self):
+            return self.dead
+
+    rep = Dying(transitive_weight=3, place=0)
+    chunk = MergingStrategy(rep, merged_count=5)
+    assert chunk.transitive_weight == 15
+    assert not chunk.is_dead()
+    rep.dead = True
+    assert chunk.is_dead()
+    assert not chunk.allow_call_conversion()
+
+
+def test_merged_chunk_groups_with_representative_type():
+    """Chunk tasks share the representative's storage group, keeping a
+    single-strategy workload on the homogeneous fast path."""
+    storage = StrategyTaskStorage(place_id=0)
+    region = FinishRegion()
+    for i in range(3):
+        region.inc()
+        storage.push(Task(lambda: None, (), {},
+                          PriorityStrategy(priority=float(i), place=0),
+                          region))
+    rep = PriorityStrategy(priority=-1.0, place=0)
+    region.inc()
+    storage.push(Task(lambda: None, (), {},
+                      MergingStrategy(rep, merged_count=2), region))
+    assert storage._sole_group is not None   # still homogeneous
+    best = storage.pop_local()
+    assert isinstance(best.strategy, MergingStrategy)  # best priority wins
+
+
+# --------------------------------------------------------------------------
+# batcher admission reuses the merge policy
+# --------------------------------------------------------------------------
+
+def test_batcher_merged_prefill_follows_policy():
+    b = ContinuousBatcher(max_batch=8, prefill_token_budget=10_000,
+                          merge_policy=MergePolicy(max_chunk=2))
+    for _ in range(6):
+        b.submit(Request(prompt_len=4, max_new_tokens=1))
+    plan = b.plan_step()
+    assert len(plan.prefill) == 2           # chunk capped by policy
+    assert b.waiting_count == 4             # rest requeued for next step
+
+
+def test_batcher_default_policy_admits_up_to_batch():
+    b = ContinuousBatcher(max_batch=4, prefill_token_budget=10_000)
+    for _ in range(6):
+        b.submit(Request(prompt_len=4, max_new_tokens=1))
+    plan = b.plan_step()
+    assert len(plan.prefill) == 4           # unchanged default behaviour
+
+
+# --------------------------------------------------------------------------
+# sharded metrics
+# --------------------------------------------------------------------------
+
+def test_metrics_shards_aggregate():
+    m = SchedulerMetrics()
+    a = m.register_worker()
+    b = m.register_worker()
+    a.spawns += 3
+    b.spawns += 2
+    b.tasks_executed += 5
+    a.observe_queue_len(7)
+    b.observe_queue_len(4)
+    m.add(spawns=1)                         # locked base shard (legacy path)
+    snap = m.snapshot()
+    assert snap["spawns"] == 6
+    assert snap["tasks_executed"] == 5
+    assert snap["max_queue_len"] == 7
+    assert m.spawns == 6                    # aggregated attribute reads
+    assert m.queue_churn == 12
+    with pytest.raises(AttributeError):
+        m.not_a_counter
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))

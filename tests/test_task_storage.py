@@ -1,0 +1,235 @@
+"""Task-storage hot paths: compaction/steal-view consistency, homogeneous
+fast path, freelists, deque live counters, steal clamps."""
+import pytest
+
+from repro.core import BaseStrategy, PriorityStrategy
+from repro.core.task import FinishRegion, Task, TaskState
+from repro.core.task_storage import (_COMPACT_LOG_LEN, DequeTaskStorage,
+                                     StrategyTaskStorage)
+
+
+def _push(storage, strategy=None, region=None):
+    region = region or FinishRegion()
+    region.inc()
+    t = Task(lambda: None, (), {}, strategy or BaseStrategy(place=0), region)
+    storage.push(t)
+    return t
+
+
+def _steal_all(storage, stealer_id):
+    """Drain via repeated single-task steals; returns tasks in steal order."""
+    out = []
+    while True:
+        batch, _w = storage.steal_batch(stealer_id, half_work=False,
+                                        max_tasks=1)
+        if not batch:
+            return out
+        out.extend(batch)
+
+
+# --------------------------------------------------------------------------
+# _compact: watermark/heap consistency across live stealer views
+# --------------------------------------------------------------------------
+
+def test_compact_preserves_multiple_stealer_views():
+    storage = StrategyTaskStorage(place_id=0)
+    region = FinishRegion()
+    n = _COMPACT_LOG_LEN + 150
+    tasks = [_push(storage, region=region) for _ in range(n)]
+
+    # Two stealers materialize views at different watermarks.
+    s1, _ = storage.steal_batch(stealer_id=1, half_work=False, max_tasks=1)
+    extra = [_push(storage, region=region) for _ in range(10)]
+    s2, _ = storage.steal_batch(stealer_id=2, half_work=False, max_tasks=1)
+    taken = set(map(id, s1 + s2))
+
+    # Owner claims most tasks -> log becomes mostly stale.
+    popped = []
+    for _ in range(n - 20):
+        t = storage.pop_local()
+        assert t is not None
+        popped.append(t)
+    taken |= set(map(id, popped))
+
+    # This steal triggers _compact (log long and >= 3/4 stale).
+    before_ready = storage.ready_count
+    s3, _ = storage.steal_batch(stealer_id=1, half_work=False, max_tasks=1)
+    assert len(storage._log) <= before_ready  # log compacted to live tasks
+    taken |= set(map(id, s3))
+
+    # Every remaining live task is still reachable by BOTH views, exactly
+    # once, with no resurrection of claimed tasks.
+    live = [t for t in tasks + extra if t.state == TaskState.READY]
+    got1 = _steal_all(storage, 1)
+    assert set(map(id, got1)) == set(map(id, live))
+    assert all(t.state == TaskState.CLAIMED for t in got1)
+    # view 2 sees nothing left (everything claimed), not stale duplicates
+    assert _steal_all(storage, 2) == []
+    assert storage.ready_count == 0
+    # nothing was ever delivered twice across pops and steals
+    all_out = list(map(id, popped + s1 + s2 + s3 + got1))
+    assert len(all_out) == len(set(all_out))
+
+
+def test_compact_cannot_resurrect_claimed_tasks():
+    storage = StrategyTaskStorage(place_id=0)
+    region = FinishRegion()
+    tasks = [_push(storage, region=region) for _ in range(50)]
+    # stealer view sees all 50
+    storage.steal_batch(stealer_id=1, half_work=False, max_tasks=1)
+    # owner claims everything else
+    while storage.pop_local() is not None:
+        pass
+    assert storage.ready_count == 0
+    # force a compaction directly: the view keeps its (now all-stale) heap
+    storage._compact()
+    assert storage._log == []
+    # a fresh live task must be the ONLY thing the view delivers — every
+    # stale CLAIMED entry ahead of it in FIFO order is skipped, not revived
+    fresh = _push(storage, region=region)
+    batch, _ = storage.steal_batch(stealer_id=1, half_work=False)
+    assert batch == [fresh]
+    assert all(t.state == TaskState.CLAIMED for t in tasks)
+
+
+def test_stale_view_entries_skipped_after_repush_elsewhere():
+    """A task that moved to another storage is stale here even though its
+    state is READY again — the residency check must reject it."""
+    a = StrategyTaskStorage(place_id=0)
+    b = StrategyTaskStorage(place_id=1)
+    region = FinishRegion()
+    t1 = _push(a, region=region)
+    t2 = _push(a, region=region)
+    [s], _ = a.steal_batch(stealer_id=2, half_work=False, max_tasks=1)
+    assert s is t1                       # FIFO steal; view now caches t2
+    assert a.pop_local() is t2           # owner claims t2 ...
+    b.push(t2)                           # ... and it re-homes to b (READY)
+    t3 = _push(a, region=region)
+    batch, _ = a.steal_batch(stealer_id=2, half_work=False)
+    assert batch == [t3]                 # stale t2 entry skipped, not stolen
+    assert b.pop_local() is t2
+
+
+# --------------------------------------------------------------------------
+# homogeneous fast path
+# --------------------------------------------------------------------------
+
+def test_homogeneous_pop_order_matches_strategy():
+    storage = StrategyTaskStorage(place_id=0)
+    region = FinishRegion()
+    prios = [5.0, 1.0, 4.0, 0.5, 3.0]
+    by_prio = {}
+    for p in prios:
+        by_prio[p] = _push(storage, PriorityStrategy(priority=p, place=0),
+                           region)
+    assert storage._sole_group is not None      # single type -> fast path
+    got = [storage.pop_local() for _ in prios]
+    assert got == [by_prio[p] for p in sorted(prios)]
+
+
+def test_mixed_then_homogeneous_again():
+    storage = StrategyTaskStorage(place_id=0)
+    region = FinishRegion()
+    _push(storage, PriorityStrategy(priority=1.0, place=0), region)
+    base = _push(storage, BaseStrategy(place=0), region)
+    assert storage._sole_group is None          # two live types
+    # drain everything; empty groups are pruned on the way
+    seen = []
+    while (t := storage.pop_local()) is not None:
+        seen.append(t)
+    assert base in seen and len(seen) == 2
+    # push a single type again -> fast path restored after mixed scan
+    t3 = _push(storage, BaseStrategy(place=0), region)
+    assert storage.pop_local() is t3
+
+
+def test_owner_item_freelist_recycles():
+    storage = StrategyTaskStorage(place_id=0)
+    region = FinishRegion()
+    for _ in range(10):
+        _push(storage, region=region)
+    while storage.pop_local() is not None:
+        pass
+    assert len(storage._owner_free) == 10
+    # reuse: pushing again consumes the freelist instead of allocating
+    for _ in range(4):
+        _push(storage, region=region)
+    assert len(storage._owner_free) == 6
+
+
+# --------------------------------------------------------------------------
+# steal clamps (half-work degenerate weights)
+# --------------------------------------------------------------------------
+
+def test_steal_half_work_zero_weight_clamped_to_half_count():
+    storage = StrategyTaskStorage(place_id=0)
+    region = FinishRegion()
+    for _ in range(10):
+        s = BaseStrategy(place=0)
+        s.transitive_weight = 0          # degenerate: bypasses the >=1 clamp
+        _push(storage, s, region)
+    stolen, weight = storage.steal_batch(stealer_id=1, half_work=True)
+    assert weight == 0
+    assert len(stolen) == 5              # max(1, ready // 2), not the queue
+    assert storage.ready_count == 5
+
+
+def test_steal_half_work_single_heavy_task_still_one_steal():
+    storage = StrategyTaskStorage(place_id=0)
+    region = FinishRegion()
+    heavy = _push(storage, BaseStrategy(transitive_weight=100, place=0),
+                  region)
+    for _ in range(10):
+        _push(storage, BaseStrategy(transitive_weight=1, place=0), region)
+    stolen, weight = storage.steal_batch(stealer_id=1, half_work=True)
+    assert stolen == [heavy] and weight == 100
+
+
+# --------------------------------------------------------------------------
+# deque storage live counters
+# --------------------------------------------------------------------------
+
+def test_deque_ready_count_live():
+    storage = DequeTaskStorage(place_id=0)
+    region = FinishRegion()
+    tasks = [_push(storage, BaseStrategy(transitive_weight=3), region)
+             for _ in range(6)]
+    assert storage.ready_count == 6
+    assert storage.ready_weight == 18
+    storage.pop_local()
+    assert storage.ready_count == 5 and storage.ready_weight == 15
+    stolen, w = storage.steal_batch(stealer_id=1)
+    assert len(stolen) == 1 and w == 3
+    assert storage.ready_count == 4 and storage.ready_weight == 12
+    del tasks
+
+
+def test_deque_stale_entries_discounted():
+    """Entries whose task went CLAIMED/DEAD behind the deque's back must not
+    keep ready_count probing-positive forever."""
+    storage = DequeTaskStorage(place_id=0)
+    region = FinishRegion()
+    a = _push(storage, region=region)
+    b = _push(storage, region=region)
+    a.state = TaskState.CLAIMED          # externally claimed -> stale entry
+    assert storage.ready_count == 2      # not yet observed
+    got = storage.pop_local()            # pops b (LIFO)
+    assert got is b and storage.ready_count == 1
+    assert storage.pop_local() is None   # a discarded as stale
+    assert storage.ready_count == 0
+    stolen, _ = storage.steal_batch(stealer_id=1)
+    assert stolen == []                  # early-out: no live work
+
+
+def test_deque_steal_half_count_uses_live_count():
+    storage = DequeTaskStorage(place_id=0, steal_half_count=True)
+    region = FinishRegion()
+    for _ in range(8):
+        _push(storage, region=region)
+    stolen, _ = storage.steal_batch(stealer_id=1)
+    assert len(stolen) == 4
+    assert storage.ready_count == 4
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))
