@@ -1,0 +1,183 @@
+"""Kernel microbenchmarks: Pallas vs XLA reference (writes
+``BENCH_kernels.json``).
+
+For each of the four kernels (flash_attention, moe_gmm, prefix_scan, wkv6)
+times the Pallas path against its pure-jnp oracle on a small shape sweep and
+cross-checks numerics.  On CPU the kernels run in interpreter mode, so the
+timings measure the *reference* hardware path only loosely — the point of
+the CPU run is (a) the numerics column and (b) exercising the exact call
+path serving uses (`kernels/compat` auto-selects interpret off-TPU).  On a
+TPU the same script times compiled Mosaic kernels.
+
+Usage:
+    PYTHONPATH=src python benchmarks/kernel_bench.py [--quick]
+        [--out BENCH_kernels.json]
+
+Output schema: {"device", "interpret", "jax", "kernels": {name: [
+    {"shape", "pallas_us", "ref_us", "speedup", "max_err"}]}}
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from common import timed
+
+from repro.kernels.compat import has_tpu, resolve_interpret
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import mha_ref
+from repro.kernels.moe_gmm.ops import grouped_swiglu
+from repro.kernels.moe_gmm.ref import grouped_swiglu_ref
+from repro.kernels.prefix_scan.ops import prefix_scan
+from repro.kernels.prefix_scan.ref import prefix_scan_ref
+from repro.kernels.wkv6.ops import wkv6
+from repro.kernels.wkv6.ref import wkv6_ref
+
+
+def _time(fn, *args, repeats):
+    fn(*args)                      # compile / warm cache
+    out, dt = timed(lambda: jax.block_until_ready(fn(*args)),
+                    repeats=repeats)
+    return out, dt
+
+
+def bench_flash(shapes, repeats):
+    rows = []
+    for (b, s, t, h, hkv, d, causal, window) in shapes:
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, t, hkv, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, t, hkv, d), jnp.float32)
+        got, dt_p = _time(lambda *a: flash_attention(
+            *a, causal=causal, window=window, bq=32, bk=32),
+            q, k, v, repeats=repeats)
+        ref_fn = lambda q_, k_, v_: jnp.moveaxis(
+            mha_ref(jnp.moveaxis(q_, 2, 1), jnp.moveaxis(k_, 2, 1),
+                    jnp.moveaxis(v_, 2, 1), causal=causal, window=window),
+            1, 2)
+        want, dt_r = _time(jax.jit(ref_fn), q, k, v, repeats=repeats)
+        rows.append({
+            "shape": f"b{b} s{s} t{t} h{h}/{hkv} d{d} "
+                     f"causal={causal} window={window}",
+            "pallas_us": dt_p * 1e6, "ref_us": dt_r * 1e6,
+            "speedup": dt_r / dt_p,
+            "max_err": float(jnp.max(jnp.abs(got - want)))})
+    return rows
+
+
+def bench_moe_gmm(shapes, repeats):
+    rows = []
+    for (e, c, d, f) in shapes:
+        ks = jax.random.split(jax.random.PRNGKey(1), 4)
+        x = jax.random.normal(ks[0], (e, c, d), jnp.float32)
+        wg = jax.random.normal(ks[1], (e, d, f)) / np.sqrt(d)
+        wu = jax.random.normal(ks[2], (e, d, f)) / np.sqrt(d)
+        wd = jax.random.normal(ks[3], (e, f, d)) / np.sqrt(f)
+        got, dt_p = _time(lambda *a: grouped_swiglu(*a, bc=32, bf=32),
+                          x, wg, wu, wd, repeats=repeats)
+        want, dt_r = _time(jax.jit(grouped_swiglu_ref), x, wg, wu, wd,
+                           repeats=repeats)
+        rows.append({
+            "shape": f"e{e} c{c} d{d} f{f}",
+            "pallas_us": dt_p * 1e6, "ref_us": dt_r * 1e6,
+            "speedup": dt_r / dt_p,
+            "max_err": float(jnp.max(jnp.abs(got - want)))})
+    return rows
+
+
+def bench_prefix_scan(shapes, repeats):
+    rows = []
+    for (r, n, block) in shapes:
+        x = jax.random.normal(jax.random.PRNGKey(2), (r, n), jnp.float32)
+        got, dt_p = _time(lambda a: prefix_scan(a, block=block), x,
+                          repeats=repeats)
+        want, dt_r = _time(jax.jit(prefix_scan_ref), x, repeats=repeats)
+        rows.append({
+            "shape": f"r{r} n{n} block{block}",
+            "pallas_us": dt_p * 1e6, "ref_us": dt_r * 1e6,
+            "speedup": dt_r / dt_p,
+            "max_err": float(jnp.max(jnp.abs(got - want)))})
+    return rows
+
+
+def bench_wkv6(shapes, repeats):
+    rows = []
+    for (b, t, h, n, chunk) in shapes:
+        ks = jax.random.split(jax.random.PRNGKey(3), 5)
+        r = jax.random.normal(ks[0], (b, t, h, n), jnp.float32)
+        k = jax.random.normal(ks[1], (b, t, h, n), jnp.float32)
+        v = jax.random.normal(ks[2], (b, t, h, n), jnp.float32)
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t, h, n))) * .5 + .45
+        u = jax.random.normal(ks[4], (h, n)) * 0.1
+        (y, _), dt_p = _time(lambda *a: wkv6(*a, chunk=chunk),
+                             r, k, v, w, u, repeats=repeats)
+        (yr, _), dt_r = _time(jax.jit(wkv6_ref), r, k, v, w, u,
+                              repeats=repeats)
+        rows.append({
+            "shape": f"b{b} t{t} h{h} n{n} chunk{chunk}",
+            "pallas_us": dt_p * 1e6, "ref_us": dt_r * 1e6,
+            "speedup": dt_r / dt_p,
+            "max_err": float(jnp.max(jnp.abs(y - yr)))})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smallest shapes only (CI smoke)")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    ap.add_argument("--max-err", type=float, default=5e-2,
+                    help="gate: fail if any kernel drifts past this")
+    args = ap.parse_args()
+
+    if args.quick:
+        flash_shapes = [(1, 64, 64, 4, 2, 32, True, None)]
+        gmm_shapes = [(4, 64, 32, 64)]
+        scan_shapes = [(4, 1024, 128)]
+        wkv_shapes = [(1, 32, 2, 16, 8)]
+    else:
+        flash_shapes = [(1, 64, 64, 4, 2, 32, True, None),
+                        (1, 128, 128, 4, 4, 64, True, 48),
+                        (2, 128, 128, 8, 2, 64, True, None)]
+        gmm_shapes = [(4, 64, 32, 64), (8, 64, 64, 128)]
+        scan_shapes = [(4, 1024, 128), (8, 8192, 256)]
+        wkv_shapes = [(1, 32, 2, 16, 8), (2, 64, 4, 32, 16)]
+
+    results = {
+        "device": jax.devices()[0].platform,
+        "interpret": resolve_interpret(None),
+        "tpu": has_tpu(),
+        "jax": jax.__version__,
+        "kernels": {
+            "flash_attention": bench_flash(flash_shapes, args.repeats),
+            "moe_gmm": bench_moe_gmm(gmm_shapes, args.repeats),
+            "prefix_scan": bench_prefix_scan(scan_shapes, args.repeats),
+            "wkv6": bench_wkv6(wkv_shapes, args.repeats),
+        },
+    }
+    for name, rows in results["kernels"].items():
+        for row in rows:
+            print(f"{name:16s} {row['shape']:42s} "
+                  f"pallas {row['pallas_us']:10.1f}us "
+                  f"ref {row['ref_us']:10.1f}us  err {row['max_err']:.2e}")
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}")
+
+    worst = max(row["max_err"] for rows in results["kernels"].values()
+                for row in rows)
+    if worst > args.max_err:
+        raise SystemExit(f"kernel drift {worst} exceeds {args.max_err}")
+
+
+if __name__ == "__main__":
+    main()

@@ -36,6 +36,13 @@ class ModelConfig:
     capacity_factor: float = 1.25
     dispatch_policy: str = "priority"   # strategy scheduling | "arrival"
     dispatch_resteal: bool = True       # second-choice restealing
+    #: dropless dispatch (capacity = T, nothing sheds).  Routing then
+    #: depends only on each token's own router scores — the property that
+    #: makes prefill+decode bit-consistent with the full forward (capacity
+    #: competition is a whole-batch function, which a single decode step
+    #: cannot see).  Set False to study capacity pressure / dead tasks
+    #: (hillclimb + dryrun dispatch cells do).
+    moe_dropless: bool = True
     router_aux_coef: float = 0.01
     # hybrid (attention : SSM interleave, Jamba-style superblocks)
     attn_every: int = 0          # within a superblock of this size, 1 attn

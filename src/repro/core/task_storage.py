@@ -266,6 +266,10 @@ class StrategyTaskStorage:
 
             stolen: List[Task] = []
             weight = 0
+            # max_tasks=0 must steal nothing (the deque storage already
+            # honors this); the loop below claims before checking the clamp.
+            if target_count <= 0:
+                return stolen, weight
             while heap:
                 task = self._valid_head(heap, free)
                 if task is None:

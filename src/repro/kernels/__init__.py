@@ -1,3 +1,15 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""TPU Pallas kernels for the serving hot paths.
+
+Four packages, one layout each: ``kernel.py`` holds the raw grid kernel
+(exported as ``<name>_pallas``), ``ops.py`` the public jitted wrapper
+(exported as ``<name>``, re-exported here), ``ref.py`` the pure-jnp oracle
+the tests sweep against.  ``compat.py`` papers over jax API drift
+(CompilerParams naming, interpret-mode auto-selection); every kernel routes
+through it.
+"""
+from .flash_attention.ops import flash_attention
+from .moe_gmm.ops import grouped_swiglu
+from .prefix_scan.ops import prefix_scan
+from .wkv6.ops import wkv6
+
+__all__ = ["flash_attention", "grouped_swiglu", "prefix_scan", "wkv6"]

@@ -8,8 +8,20 @@ kv head h // group), causal + sliding-window masking by block-index
 predicates, and fully-masked kv blocks are skipped with ``pl.when`` — for
 SWA this turns the O(S·T) sweep into O(S·window) compute.
 
+Masking knobs (all composable):
+
+* ``q_offset`` — absolute position of query row 0.  ``0`` is the top-left
+  causal convention (row i sees cols <= i); ``t - s`` gives the
+  bottom-right alignment a chunked prefill over history needs.
+* ``kv_len`` — static true (unpadded) kv length; padded columns beyond it
+  are always masked.
+* ``kv_valid`` — optional per-batch *dynamic* valid-kv count ``[B]``.  This
+  is the single-token decode path over a partially-filled (or ring-wrapped)
+  cache: slots ``>= kv_valid[b]`` are masked for that sequence only.
+
 Forward only: the training path uses XLA attention (or this kernel under
-``jax.checkpoint`` recomputation); serving uses it directly.
+``jax.checkpoint`` recomputation); serving uses it directly — prefill via
+the causal path, decode via ``causal=False`` + ``kv_valid``.
 """
 from __future__ import annotations
 
@@ -21,13 +33,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["mha_pallas"]
+from ..compat import compiler_params, resolve_interpret
+
+__all__ = ["flash_attention_pallas"]
 
 _NEG = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-            scale, causal, window, bq, bk, kv_len):
+def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale, causal, window, bq, bk, kv_len, q_offset):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
     nk = pl.num_programs(3)
@@ -38,8 +52,9 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         m_ref[...] = jnp.full_like(m_ref, _NEG)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    # Block-level reachability (static in program ids → cheap skip).
-    q_lo = qi * bq
+    # Block-level reachability (static in program ids → cheap skip).  Rows
+    # are absolute query positions (local row + q_offset).
+    q_lo = q_offset + qi * bq
     q_hi = q_lo + bq - 1
     k_lo = ki * bk
     k_hi = k_lo + bk - 1
@@ -58,7 +73,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
                                 preferred_element_type=jnp.float32) * scale
         rows = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
         cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-        mask = cols < kv_len
+        mask = cols < jnp.minimum(kv_len, valid_ref[0, 0])
         if causal:
             mask &= cols <= rows
         if window is not None:
@@ -83,26 +98,33 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
                                              "bq", "bk", "interpret",
-                                             "kv_len"))
-def mha_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
-               causal: bool = True, window: Optional[int] = None,
-               scale: Optional[float] = None, bq: int = 128, bk: int = 128,
-               interpret: bool = True,
-               kv_len: Optional[int] = None) -> jax.Array:
+                                             "kv_len", "q_offset"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           kv_valid: Optional[jax.Array] = None, *,
+                           causal: bool = True, window: Optional[int] = None,
+                           scale: Optional[float] = None, bq: int = 128,
+                           bk: int = 128, interpret: Optional[bool] = None,
+                           kv_len: Optional[int] = None,
+                           q_offset: int = 0) -> jax.Array:
     """q: [B, H, S, d]; k, v: [B, Hkv, T, d] with H % Hkv == 0.
     S % bq == 0 and T % bk == 0 (ops wrapper pads; ``kv_len`` = true,
-    unpadded T so padded columns are masked out).  Returns [B, H, S, d]."""
+    unpadded T so padded columns are masked out).  ``kv_valid``: optional
+    [B] int32 per-batch valid kv count (decode over a partial cache).
+    Returns [B, H, S, d]."""
     b, h, s, d = q.shape
     _, hkv, t, _ = k.shape
     assert h % hkv == 0 and s % bq == 0 and t % bk == 0
     group = h // hkv
     if scale is None:
         scale = d ** -0.5
+    if kv_valid is None:
+        kv_valid = jnp.full((b,), t, jnp.int32)
+    valid = kv_valid.astype(jnp.int32).reshape(b, 1)
     grid = (b, h, s // bq, t // bk)
     return pl.pallas_call(
         functools.partial(_kernel, scale=scale, causal=causal,
                           window=window, bq=bq, bk=bk,
-                          kv_len=kv_len or t),
+                          kv_len=kv_len or t, q_offset=q_offset),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
@@ -110,6 +132,7 @@ def mha_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                          lambda b_, h_, qi, ki: (b_, h_ // group, ki, 0)),
             pl.BlockSpec((1, 1, bk, d),
                          lambda b_, h_, qi, ki: (b_, h_ // group, ki, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h_, qi, ki: (b_, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, bq, d),
                                lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
@@ -119,8 +142,8 @@ def mha_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
-        interpret=interpret,
-    )(q, k, v)
+        interpret=resolve_interpret(interpret),
+    )(q, k, v, valid)

@@ -1,4 +1,11 @@
-"""Public wrapper: model layout [B, S, H, d] in/out, padding, GQA."""
+"""Public wrapper: model layout [B, S, H, d] in/out, padding, GQA.
+
+``flash_attention`` is the name the model/serving layer imports; the raw
+grid kernel is ``kernel.flash_attention_pallas`` (kernel-layout
+[B, H, S, d]).  See the kernel docstring for the masking knobs
+(``q_offset`` for s≠t causal alignment, ``kv_valid`` for decode over a
+partially-filled cache).
+"""
 from __future__ import annotations
 
 import functools
@@ -7,18 +14,26 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .kernel import mha_pallas
+from .kernel import flash_attention_pallas
 
 __all__ = ["flash_attention"]
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
-                                             "interpret", "bq", "bk"))
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                                             "interpret", "bq", "bk",
+                                             "q_offset"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    kv_valid: Optional[jax.Array] = None, *,
                     causal: bool = True, window: Optional[int] = None,
                     scale: Optional[float] = None, bq: int = 128,
-                    bk: int = 128, interpret: bool = True) -> jax.Array:
-    """q: [B, S, H, d]; k, v: [B, T, Hkv, d] → [B, S, H, d]."""
+                    bk: int = 128, interpret: Optional[bool] = None,
+                    q_offset: int = 0) -> jax.Array:
+    """q: [B, S, H, d]; k, v: [B, T, Hkv, d] → [B, S, H, d].
+
+    ``kv_valid``: optional [B] int32 per-sequence count of valid kv
+    positions (single-token decode over a shared cache at mixed depths).
+    ``q_offset``: absolute position of query row 0 for causal/window masks
+    (``t - s`` = bottom-right alignment for chunked prefill)."""
     b, s, h, d = q.shape
     t = k.shape[1]
     bq = min(bq, max(8, 1 << (s - 1).bit_length()))
@@ -34,7 +49,9 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
         vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
     # kv_len masking inside the kernel ignores padded columns
-    out = mha_pallas(qt, kt, vt, causal=causal, window=window, scale=scale,
-                     bq=bq, bk=bk, interpret=interpret, kv_len=t)
+    out = flash_attention_pallas(qt, kt, vt, kv_valid, causal=causal,
+                                 window=window, scale=scale, bq=bq, bk=bk,
+                                 interpret=interpret, kv_len=t,
+                                 q_offset=q_offset)
     out = out[:, :, :s]
     return jnp.moveaxis(out, 1, 2)

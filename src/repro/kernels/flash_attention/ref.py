@@ -8,8 +8,13 @@ import jax.numpy as jnp
 
 
 def mha_ref(q, k, v, *, causal: bool = True, window: Optional[int] = None,
-            scale: Optional[float] = None):
-    """q: [B,H,S,d]; k, v: [B,Hkv,T,d].  Returns [B,H,S,d]."""
+            scale: Optional[float] = None, q_offset: int = 0,
+            kv_valid: Optional[jax.Array] = None):
+    """q: [B,H,S,d]; k, v: [B,Hkv,T,d].  Returns [B,H,S,d].
+
+    ``q_offset`` shifts the causal/window row positions (row i is absolute
+    position ``q_offset + i``); ``kv_valid`` ([B] int32) masks kv columns
+    ``>= kv_valid[b]`` per batch element."""
     b, h, s, d = q.shape
     hkv, t = k.shape[1], k.shape[2]
     if scale is None:
@@ -18,13 +23,16 @@ def mha_ref(q, k, v, *, causal: bool = True, window: Optional[int] = None,
     v = jnp.repeat(v, h // hkv, axis=1)
     logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
                         k.astype(jnp.float32)) * scale
-    i = jnp.arange(s)[:, None]
+    i = q_offset + jnp.arange(s)[:, None]
     j = jnp.arange(t)[None, :]
     mask = jnp.ones((s, t), bool)
     if causal:
         mask &= j <= i
     if window is not None:
         mask &= i - j < window
+    mask = jnp.broadcast_to(mask, (b, 1, s, t))
+    if kv_valid is not None:
+        mask &= (j[None, :] < kv_valid[:, None, None, None])
     logits = jnp.where(mask, logits, -jnp.inf)
     w = jax.nn.softmax(logits, axis=-1)
     return jnp.einsum("bhst,bhtd->bhsd", w,

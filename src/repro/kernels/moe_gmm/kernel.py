@@ -15,11 +15,14 @@ multiples of (8, 128) MXU tiles.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from ..compat import compiler_params, resolve_interpret
 
 __all__ = ["grouped_swiglu_pallas"]
 
@@ -49,7 +52,7 @@ def _kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref):
 @functools.partial(jax.jit, static_argnames=("bc", "bf", "interpret"))
 def grouped_swiglu_pallas(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
                           w_down: jax.Array, *, bc: int = 64, bf: int = 128,
-                          interpret: bool = True) -> jax.Array:
+                          interpret: Optional[bool] = None) -> jax.Array:
     """x: [E, C, D]; w_gate/w_up: [E, D, F]; w_down: [E, F, D] → [E, C, D]."""
     e, c, d = x.shape
     f = w_gate.shape[-1]
@@ -67,7 +70,7 @@ def grouped_swiglu_pallas(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
         out_specs=pl.BlockSpec((1, bc, d), lambda e_, ci, fi: (e_, ci, 0)),
         out_shape=jax.ShapeDtypeStruct((e, c, d), x.dtype),
         scratch_shapes=[pltpu.VMEM((bc, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, w_gate, w_up, w_down)

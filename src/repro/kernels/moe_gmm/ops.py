@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +16,7 @@ __all__ = ["grouped_swiglu"]
 @functools.partial(jax.jit, static_argnames=("bc", "bf", "interpret"))
 def grouped_swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
                    w_down: jax.Array, *, bc: int = 64, bf: int = 128,
-                   interpret: bool = True) -> jax.Array:
+                   interpret: Optional[bool] = None) -> jax.Array:
     e, c, d = x.shape
     f = w_gate.shape[-1]
     bc = min(bc, c) if c >= 8 else c

@@ -17,11 +17,14 @@ reset at block 0 of each row.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from ..compat import compiler_params, resolve_interpret
 
 __all__ = ["prefix_scan_pallas"]
 
@@ -41,7 +44,7 @@ def _kernel(x_ref, o_ref, carry_ref, *, acc_dtype):
 @functools.partial(jax.jit,
                    static_argnames=("block", "interpret", "acc_dtype"))
 def prefix_scan_pallas(x: jax.Array, *, block: int = 256,
-                       interpret: bool = True,
+                       interpret: Optional[bool] = None,
                        acc_dtype=None) -> jax.Array:
     """Inclusive prefix sum along the last axis of a 2-D array.
 
@@ -60,7 +63,7 @@ def prefix_scan_pallas(x: jax.Array, *, block: int = 256,
         out_specs=pl.BlockSpec((1, block), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((r, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((1, 1), acc_dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x)

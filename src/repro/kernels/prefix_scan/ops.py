@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -13,7 +14,7 @@ __all__ = ["prefix_scan"]
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def prefix_scan(x: jax.Array, *, block: int = 256,
-                interpret: bool = True) -> jax.Array:
+                interpret: Optional[bool] = None) -> jax.Array:
     """Inclusive prefix sum along the last axis; any rank ≥ 1; pads the
     last axis to a block multiple internally."""
     shape = x.shape

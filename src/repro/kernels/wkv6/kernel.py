@@ -10,28 +10,32 @@ has no use here: the state update is rank-1).
 
 Forward only (serving/prefill path; training uses the chunked associative
 scan in ``models/ssm.py``, which this kernel is verified against).
-Emits y and the final state (for prefill → decode hand-off).
+Takes an optional initial state ``s0`` (decode → re-prefill hand-off) and
+emits y plus the final state (prefill → decode hand-off).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import compiler_params, resolve_interpret
+
 __all__ = ["wkv6_pallas"]
 
 
-def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_out_ref, s_ref, *,
-            chunk):
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, s_out_ref,
+            s_ref, *, chunk):
     ti = pl.program_id(2)
     nt = pl.num_programs(2)
 
     @pl.when(ti == 0)
     def _init():
-        s_ref[...] = jnp.zeros_like(s_ref)
+        s_ref[...] = s0_ref[0, 0]
 
     u = u_ref[0].astype(jnp.float32)                  # [N]
     r = r_ref[0, :, 0].astype(jnp.float32)            # [c, N]
@@ -61,27 +65,32 @@ def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_out_ref, s_ref, *,
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def wkv6_pallas(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
-                u: jax.Array, *, chunk: int = 64, interpret: bool = True):
-    """r, k, v: [B, T, H, N]; w: [B, T, H, N] decay in (0,1); u: [H, N].
+                u: jax.Array, s0: Optional[jax.Array] = None, *,
+                chunk: int = 64, interpret: Optional[bool] = None):
+    """r, k, v: [B, T, H, N]; w: [B, T, H, N] decay in (0,1); u: [H, N];
+    s0: optional [B, H, N, N] initial state (zeros when omitted).
     Returns (y [B, T, H, N], s_end [B, H, N, N])."""
     b, t, h, n = r.shape
     assert t % chunk == 0, (t, chunk)
+    if s0 is None:
+        s0 = jnp.zeros((b, h, n, n), jnp.float32)
     grid = (b, h, t // chunk)
     io_spec = pl.BlockSpec((1, chunk, 1, n),
                            lambda b_, h_, ti: (b_, ti, h_, 0))
+    state_spec = pl.BlockSpec((1, 1, n, n),
+                              lambda b_, h_, ti: (b_, h_, 0, 0))
     y, s_end = pl.pallas_call(
         functools.partial(_kernel, chunk=chunk),
         grid=grid,
         in_specs=[io_spec, io_spec, io_spec, io_spec,
-                  pl.BlockSpec((1, n), lambda b_, h_, ti: (h_, 0))],
-        out_specs=[io_spec,
-                   pl.BlockSpec((1, 1, n, n),
-                                lambda b_, h_, ti: (b_, h_, 0, 0))],
+                  pl.BlockSpec((1, n), lambda b_, h_, ti: (h_, 0)),
+                  state_spec],
+        out_specs=[io_spec, state_spec],
         out_shape=[jax.ShapeDtypeStruct((b, t, h, n), r.dtype),
                    jax.ShapeDtypeStruct((b, h, n, n), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(r, k, v, w, u)
+        interpret=resolve_interpret(interpret),
+    )(r, k, v, w, u, s0.astype(jnp.float32))
     return y, s_end

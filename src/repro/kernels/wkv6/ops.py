@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 
@@ -12,8 +13,9 @@ __all__ = ["wkv6"]
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
-         u: jax.Array, *, chunk: int = 64, interpret: bool = True):
+         u: jax.Array, s0: Optional[jax.Array] = None, *, chunk: int = 64,
+         interpret: Optional[bool] = None):
     t = r.shape[1]
     while t % chunk:
         chunk //= 2
-    return wkv6_pallas(r, k, v, w, u, chunk=chunk, interpret=interpret)
+    return wkv6_pallas(r, k, v, w, u, s0, chunk=chunk, interpret=interpret)

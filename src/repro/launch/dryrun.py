@@ -98,7 +98,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              cfg_overrides: Optional[Dict] = None) -> Dict:
     cfg = get_config(arch)
     if policy_override:
-        cfg = cfg.replace(dispatch_policy=policy_override)
+        # dispatch policy only matters under capacity pressure
+        cfg = cfg.replace(dispatch_policy=policy_override,
+                          moe_dropless=False)
     if cfg_overrides:
         cfg = cfg.replace(**cfg_overrides)
     cell = shape_by_name(shape_name)

@@ -32,20 +32,25 @@ VARIANTS: Dict[str, Tuple[str, dict, Optional[int]]] = {
     "onehot": ("tp", {"onehot_embed": True}, None),
     "onehot+vchunk": ("tp", {"onehot_embed": True,
                              "loss_vocab_chunk": 8192}, None),
-    # MoE dispatch variants
+    # MoE dispatch variants (droppy: capacity pressure is the study)
     "arrival": ("tp", {"dispatch_policy": "arrival",
-                       "dispatch_resteal": False}, None),
-    "noresteal": ("tp", {"dispatch_resteal": False}, None),
-    "cf1.0": ("tp", {"capacity_factor": 1.0}, None),
+                       "dispatch_resteal": False,
+                       "moe_dropless": False}, None),
+    "noresteal": ("tp", {"dispatch_resteal": False,
+                         "moe_dropless": False}, None),
+    "cf1.0": ("tp", {"capacity_factor": 1.0,
+                     "moe_dropless": False}, None),
     "cf1.0+noresteal": ("tp", {"capacity_factor": 1.0,
-                               "dispatch_resteal": False}, None),
+                               "dispatch_resteal": False,
+                               "moe_dropless": False}, None),
     # microbatch count
     "micro2x": ("tp", {}, -2),      # negative → multiply default
     "microhalf": ("tp", {}, -999),  # special: default // 2
     # remat off (memory for flops trade)
     "noremat": ("tp", {"remat": False}, None),
     "dp+vchunk+noresteal": ("dp", {"loss_vocab_chunk": 8192,
-                                   "dispatch_resteal": False}, None),
+                                   "dispatch_resteal": False,
+                                   "moe_dropless": False}, None),
     "swa_off": ("tp", {"sliding_window": None}, None),
     # pin activations batch-sharded at layer boundaries
     "actshard": ("tp", {"activation_sharding": True}, None),
@@ -56,7 +61,8 @@ VARIANTS: Dict[str, Tuple[str, dict, Optional[int]]] = {
     # replicate the embedding table (kills the SPMD gather fallback)
     "embedrep": ("tp-er", {}, None),
     "embedrep+microhalf": ("tp-er", {}, -999),
-    "embedrep+cf1.0": ("tp-er", {"capacity_factor": 1.0}, None),
+    "embedrep+cf1.0": ("tp-er", {"capacity_factor": 1.0,
+                                 "moe_dropless": False}, None),
 }
 
 PEAK_FLOPS = 197e12

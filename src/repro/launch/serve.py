@@ -94,12 +94,24 @@ def main() -> None:
                              "least_work", "slo_aware"])
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    # Pallas kernels on the hot path: flash prefill/decode + grouped-matmul
+    # MoE + WKV.  Default auto = compiled kernels on TPU, XLA elsewhere
+    # (the CPU interpreter validates the path but is far slower than XLA);
+    # force with --use-flash (CI/smoke) or --no-use-flash.
+    ap.add_argument("--use-flash", dest="use_flash", action="store_true",
+                    default=None)
+    ap.add_argument("--no-use-flash", dest="use_flash", action="store_false")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = scale_down(cfg, layers=4, d_model=256, d_ff=1024,
                          vocab=min(cfg.vocab_size, 32768))
+    if args.use_flash is None:
+        from ..kernels.compat import has_tpu
+        cfg = cfg.replace(use_flash=has_tpu())
+    else:
+        cfg = cfg.replace(use_flash=args.use_flash)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     if args.replicas > 1:

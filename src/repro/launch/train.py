@@ -50,6 +50,11 @@ def main() -> None:
                          d_model=args.smoke_dmodel,
                          d_ff=args.smoke_dmodel * 4,
                          vocab=min(cfg.vocab_size, 32768))
+    # Training pays for capacity-limited (droppy) dispatch on purpose:
+    # dead-task shedding is the regularizer/perf model under study, and
+    # dropless capacity (= T) would inflate expert buffers ~E/(k·cf)×.
+    # Serving/eval keep the dropless default (decode ≡ forward).
+    cfg = cfg.replace(moe_dropless=False)
     model = build_model(cfg)
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)

@@ -202,15 +202,28 @@ def attention_decode(p: dict, x: jax.Array, cache: KVCache, pos: jax.Array,
         k_new[:, 0].astype(cache.k.dtype))
     v_cache = cache.v.at[bidx, write_idx].set(
         v_new[:, 0].astype(cache.v.dtype))
-    # valid positions per sequence: j <= pos (within window when sliding)
-    j = jnp.arange(s_max)[None, :]
-    pcol = pos_vec[:, None]
-    valid = j <= pcol
-    if cfg.sliding_window is not None:
-        valid = (pcol - j < cfg.sliding_window) & (j <= pcol)
-        valid |= s_max <= pcol       # wrapped: the whole ring is valid
-    mask = valid[:, None, :]
-    out = _sdpa(q, k_cache, v_cache, mask, hd ** -0.5)
+    if cfg.use_flash:
+        # Flash decode: one query row, non-causal, per-sequence valid-kv
+        # count.  Cache slots are filled 0..pos before wrap and the whole
+        # ring is live after (window eviction == ring eviction), so the
+        # count is min(pos+1, ring size) — slot order does not matter
+        # (RoPE is applied at projection, attention is kv-permutation
+        # invariant).
+        from ..kernels.flash_attention.ops import flash_attention
+        kv_valid = jnp.minimum(pos_vec + 1, s_max).astype(jnp.int32)
+        out = flash_attention(q, k_cache, v_cache, kv_valid,
+                              causal=False, scale=hd ** -0.5)
+    else:
+        # valid positions per sequence: j <= pos (within window when
+        # sliding)
+        j = jnp.arange(s_max)[None, :]
+        pcol = pos_vec[:, None]
+        valid = j <= pcol
+        if cfg.sliding_window is not None:
+            valid = (pcol - j < cfg.sliding_window) & (j <= pcol)
+            valid |= s_max <= pcol   # wrapped: the whole ring is valid
+        mask = valid[:, None, :]
+        out = _sdpa(q, k_cache, v_cache, mask, hd ** -0.5)
     y = linear(p["wo"], out.reshape(b, 1, -1))
     return y, KVCache(k_cache, v_cache)
 

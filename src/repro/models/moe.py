@@ -68,7 +68,16 @@ def moe_fwd(p: dict, x: jax.Array, cfg: ModelConfig,
     xt = x.reshape(-1, d)
     t = xt.shape[0]
     k, e = cfg.num_experts_per_tok, cfg.num_experts
-    cap = moe_capacity(cfg, t)
+    # Dropless: capacity = T is the exact worst case (top-k experts are
+    # distinct, so one expert sees at most one assignment per token) — no
+    # assignment can shed, so decode ≡ forward.  The cost is dense-buffer
+    # padding: ~E/(k·cf) more slots (mostly zeros) than droppy dispatch;
+    # a tighter static bound cannot exist (routing may send every token to
+    # one expert), so throughput studies that can tolerate drops opt out
+    # via moe_dropless=False (hillclimb/dryrun dispatch cells do).
+    # Droppy: the configured capacity, clamped to the same T bound (slots
+    # past it are dead space).
+    cap = t if cfg.moe_dropless else min(moe_capacity(cfg, t), t)
 
     logits = xt.astype(jnp.float32) @ p["router"]["w"]
     expert_idx, gate, probs = route_topk(logits, k)

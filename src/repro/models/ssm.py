@@ -149,17 +149,27 @@ def rwkv_time_mix(p: dict, x: jax.Array, cfg: ModelConfig,
     t_pad = t + pad
     nchunks = t_pad // c
 
-    def body(s, inp):
-        rc, kc, vc, wc = inp
-        y, s_next = _wkv_chunk(rc, kc, vc, wc, p["u"], s)
-        return s_next, y
+    if cfg.use_flash and state is not None:
+        # Pallas WKV kernel (forward-only, not differentiable): the
+        # prefill/serving path, which always passes an explicit state.  The
+        # training forward (state=None, grads flow) stays on the
+        # associative scan below.  Verified against _wkv_chunk in
+        # test_kernels.
+        from ..kernels.wkv6.ops import wkv6
+        ys_k, s_end = wkv6(r, k, v, w, p["u"], s0, chunk=c)
+        y = ys_k.reshape(b, t_pad, d)[:, :t]
+    else:
+        def body(s, inp):
+            rc, kc, vc, wc = inp
+            y, s_next = _wkv_chunk(rc, kc, vc, wc, p["u"], s)
+            return s_next, y
 
-    resh = lambda a: a.reshape(b, nchunks, c, h, n).swapaxes(0, 1)
-    body_fn = jax.checkpoint(body) if cfg.remat else body
-    s_end, ys = jax.lax.scan(body_fn, s0,
-                             (resh(r), resh(k), resh(v), resh(w)),
-                             unroll=cfg.unroll_scans)
-    y = ys.swapaxes(0, 1).reshape(b, t_pad, d)[:, :t]
+        resh = lambda a: a.reshape(b, nchunks, c, h, n).swapaxes(0, 1)
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        s_end, ys = jax.lax.scan(body_fn, s0,
+                                 (resh(r), resh(k), resh(v), resh(w)),
+                                 unroll=cfg.unroll_scans)
+        y = ys.swapaxes(0, 1).reshape(b, t_pad, d)[:, :t]
     h_groups = d // n
     y = group_norm(p["ln_x"], y.astype(x.dtype), h_groups, cfg.norm_eps) * g
     y = linear(p["wo"], y)

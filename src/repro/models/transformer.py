@@ -95,7 +95,8 @@ def _block_decode(p: dict, x: jax.Array, cache: KVCache, pos, cfg):
     h = x + y_attn
     z = rms_norm(p["ln2"], h, cfg.norm_eps)
     if _is_moe(cfg):
-        y, _ = moe_fwd(p["moe"], z, cfg)
+        # same kernel selection as the forward path: decode must not drift
+        y, _ = moe_fwd(p["moe"], z, cfg, use_kernel=cfg.use_flash)
     else:
         y = mlp(p["mlp"], z)
     return h + y, new_cache

@@ -49,6 +49,13 @@ def test_prefix_scan_property(rows, n, block, seed):
     (2, 96, 96, 8, 2, 32, True, None),
     (1, 32, 96, 4, 1, 32, False, None),
     (1, 64, 64, 2, 2, 128, True, None),
+    # s != t causal (top-left convention, matching the ref oracle)
+    (1, 32, 96, 4, 2, 32, True, None),
+    (2, 64, 128, 4, 1, 32, True, 48),
+    # partial final q and kv blocks (padding + kv_len masking)
+    (2, 40, 100, 4, 2, 32, True, None),
+    (1, 100, 100, 4, 4, 32, False, None),
+    (1, 24, 72, 2, 2, 32, True, 16),
 ])
 def test_flash_attention_vs_ref(b, s, t, h, hkv, d, causal, window):
     ks = jax.random.split(jax.random.PRNGKey(1), 3)
@@ -74,6 +81,55 @@ def test_flash_attention_bf16():
                 jnp.moveaxis(v, 2, 1), causal=True), 1, 2)
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(ref, np.float32), atol=3e-2)
+
+
+def test_flash_attention_gqa_window_bf16():
+    """Combined case: grouped queries + sliding window + bf16 inputs."""
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (2, 96, 8, 32), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (2, 96, 2, 32), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (2, 96, 2, 32), jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, window=40, bq=32, bk=32)
+    ref = jnp.moveaxis(
+        mha_ref(jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+                jnp.moveaxis(v, 2, 1), causal=True, window=40), 1, 2)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), atol=3e-2)
+
+
+@pytest.mark.parametrize("window", [None, 24])
+def test_flash_attention_q_offset_bottom_right(window):
+    """q_offset = t - s gives the bottom-right causal alignment a chunked
+    prefill over history needs: new row i sees absolute cols <= t-s+i."""
+    b, s, t, h, hkv, d = 1, 32, 96, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, t, hkv, d), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          bq=32, bk=32, q_offset=t - s)
+    ref = jnp.moveaxis(
+        mha_ref(jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+                jnp.moveaxis(v, 2, 1), causal=True, window=window,
+                q_offset=t - s), 1, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_attention_kv_valid_decode():
+    """The flash-decode path: one query row per sequence, non-causal,
+    per-batch valid-kv counts (a shared cache at mixed depths)."""
+    b, t, h, hkv, d = 3, 40, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, t, hkv, d), jnp.float32)
+    kv_valid = jnp.asarray([5, 17, 40], jnp.int32)
+    got = flash_attention(q, k, v, kv_valid, causal=False, bq=32, bk=32)
+    ref = jnp.moveaxis(
+        mha_ref(jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+                jnp.moveaxis(v, 2, 1), causal=False, kv_valid=kv_valid),
+        1, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
 
 
 # ----------------------------------------------------------------- moe gmm
@@ -106,6 +162,27 @@ def test_wkv6_vs_ref(b, t, h, n, chunk):
     yr, sr = wkv6_ref(r, k, v, w, u)
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-3)
     np.testing.assert_allclose(np.asarray(s), np.asarray(sr), atol=1e-3)
+
+
+def test_wkv6_initial_state_handoff():
+    """Running [0, T/2) then feeding s_end back as s0 for [T/2, T) must
+    equal the single full-sequence run (prefill → decode → re-prefill)."""
+    b, t, h, n = 2, 32, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    r, k, v = (jax.random.normal(ks[i], (b, t, h, n)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t, h, n))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (h, n)) * 0.1
+    y_full, s_full = wkv6(r, k, v, w, u, chunk=8)
+    half = t // 2
+    cut = lambda a, sl: a[:, sl]
+    y1, s1 = wkv6(cut(r, slice(0, half)), cut(k, slice(0, half)),
+                  cut(v, slice(0, half)), cut(w, slice(0, half)), u, chunk=8)
+    y2, s2 = wkv6(cut(r, slice(half, t)), cut(k, slice(half, t)),
+                  cut(v, slice(half, t)), cut(w, slice(half, t)), u, s1,
+                  chunk=8)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], axis=1)),
+                               np.asarray(y_full), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), atol=1e-3)
 
 
 def test_wkv6_kernel_matches_train_path():

@@ -67,6 +67,38 @@ def test_engine_priority_order_under_contention():
     assert hi.finished_at <= lo.finished_at
 
 
+def test_engine_serves_through_flash_kernels():
+    """Serving smoke over the Pallas path: prefill uses the flash kernel,
+    decode the kv_valid flash-decode path (interpret mode on CPU), and
+    batching must still not change what a request generates."""
+    cfg = scale_down(get_config("qwen2-1.5b")).replace(use_flash=True)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    eng = ServingEngine(model, params, max_batch=2, s_max=32)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, 6),
+               rng.integers(0, cfg.vocab_size, 11)]
+    reqs = [eng.submit(p, max_new_tokens=3) for p in prompts]
+    outs = eng.run_until_drained()
+    for r in reqs:
+        assert r.state.name == "DONE"
+        assert len(outs[r.rid]) == 3
+
+    # sequential flash-path generation must match the batched engine
+    for p, r in zip(prompts, reqs):
+        toks = jnp.asarray(p[None, :])
+        logits, cache = model.prefill(params, {"tokens": toks}, 32)
+        seq = [int(jnp.argmax(logits[0, -1]))]
+        pos = len(p)
+        for _ in range(2):
+            lg, cache = model.decode_step(
+                params, jnp.asarray([[seq[-1]]], jnp.int32), cache,
+                jnp.int32(pos))
+            seq.append(int(jnp.argmax(lg[0, -1])))
+            pos += 1
+        assert outs[r.rid] == seq, (outs[r.rid], seq)
+
+
 def test_engine_cancellation_is_dead_task():
     cfg, model, params, eng = _engine(max_batch=1, s_max=32)
     rng = np.random.default_rng(3)

@@ -231,5 +231,70 @@ def test_deque_steal_half_count_uses_live_count():
     assert storage.ready_count == 4
 
 
+# --------------------------------------------------------------------------
+# steal clamps + freelists under kernel-backed task weights
+# --------------------------------------------------------------------------
+
+def test_steal_batch_max_tasks_zero_steals_nothing():
+    """Regression: the strategy storage claimed one task before checking the
+    count clamp, so max_tasks=0 (a thief whose budget rounded down to zero)
+    stole a task the deque storage would have refused to move."""
+    region = FinishRegion()
+    strat = StrategyTaskStorage(place_id=0)
+    for _ in range(4):
+        _push(strat, region=region)
+    stolen, weight = strat.steal_batch(stealer_id=1, max_tasks=0)
+    assert stolen == [] and weight == 0
+    assert strat.ready_count == 4
+
+    dq = DequeTaskStorage(place_id=0)
+    for _ in range(4):
+        _push(dq, region=region)
+    stolen, weight = dq.steal_batch(stealer_id=1, max_tasks=0)
+    assert stolen == [] and weight == 0
+    assert dq.ready_count == 4
+
+
+def test_steal_half_work_kernel_scale_weights():
+    """Kernel-backed weights are token/flop counts (orders of magnitude
+    above the paper's unit weights); the half-work target and the count
+    clamp must both keep biting."""
+    storage = StrategyTaskStorage(place_id=0)
+    region = FinishRegion()
+    # prefill-sized tasks: weights 4096, 2048, 1024, ... (steal order is
+    # creation order for BaseStrategy)
+    weights = [4096, 2048, 1024, 512, 256, 128]
+    for w in weights:
+        _push(storage, BaseStrategy(transitive_weight=w, place=0), region)
+    stolen, weight = storage.steal_batch(stealer_id=1, half_work=True)
+    # half the work is 4032; the first task alone (4096) crosses it
+    assert len(stolen) == 1 and weight == 4096
+    assert storage.ready_weight == sum(weights) - 4096
+    # count mode on the remainder: half the tasks regardless of weight
+    stolen2, _ = storage.steal_batch(stealer_id=1, half_work=False)
+    assert len(stolen2) == max(1, 5 // 2)
+
+
+def test_steal_item_freelist_recycles_across_views():
+    """Steal-item wrappers recycled from one stealer's view must be safely
+    reusable by another view mid-churn: no duplicate or lost deliveries."""
+    storage = StrategyTaskStorage(place_id=0)
+    region = FinishRegion()
+    tasks = [_push(storage, region=region) for _ in range(12)]
+    got1, _ = storage.steal_batch(stealer_id=1, half_work=False, max_tasks=3)
+    assert len(storage._steal_free) >= 3       # wrappers recycled
+    free_before = len(storage._steal_free)
+    # view 2 refresh consumes recycled wrappers for the still-live tasks
+    got2, _ = storage.steal_batch(stealer_id=2, half_work=False, max_tasks=3)
+    assert len(storage._steal_free) < free_before + len(got2)
+    more = [_push(storage, region=region) for _ in range(4)]
+    got3 = _steal_all(storage, 1) + _steal_all(storage, 2)
+    seen = list(map(id, got1 + got2 + got3))
+    assert len(seen) == len(set(seen))         # nothing delivered twice
+    assert set(seen) == set(map(id, tasks + more))  # nothing lost
+    assert storage.ready_count == 0
+    assert all(item.task is None for item in storage._steal_free)
+
+
 if __name__ == "__main__":
     raise SystemExit(pytest.main([__file__, "-q"]))
