@@ -1,0 +1,131 @@
+"""Perf-trajectory gate: compare a fresh BENCH_*.json against the committed
+baseline and fail on regressions beyond a tolerance.
+
+The committed ``BENCH_kernels.json`` / ``BENCH_scheduler.json`` /
+``BENCH_serving.json`` at the repo root are the baselines (refreshed
+whenever a PR legitimately moves them); CI re-runs the benchmarks into
+fresh files and gates:
+
+    python benchmarks/compare_bench.py --baseline BENCH_serving.json \
+        --fresh fresh/BENCH_serving.json --tolerance 0.25
+
+Comparison walks both JSON trees in parallel and gates every numeric leaf
+whose key has a known direction:
+
+* higher-better (throughputs, speedups): fail when
+  ``fresh < baseline * (1 - tolerance)``;
+* lower-better (latencies, per-call times): fail when
+  ``fresh > baseline * (1 + tolerance)``;
+* ``max_err`` (kernel numerics): absolute gate —
+  ``fresh <= max(4 * baseline, 1e-3)`` (ratio-gating numbers at 1e-7 only
+  measures rounding noise).
+
+Timings measured on shared CI runners are noisy; pick the tolerance per
+file (the workflow uses 0.25 for the deterministic simulator/scheduler
+counters and a wider one for interpreter-mode kernel wall times).
+Metrics present in only one file are reported (a vanished metric is a
+silent-regression smell) but only fail with ``--strict-keys``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Tuple
+
+HIGHER_BETTER = {
+    "ops_per_s", "tasks_per_s", "elements_per_s", "tok_per_s", "speedup",
+    "merged_speedup_vs_unmerged", "chunked_speedup_vs_fifo_p99",
+}
+LOWER_BETTER = {
+    "p50_s", "p90_s", "p99_s", "mean_s", "max_s", "pallas_us", "ref_us",
+    "us_per_call", "interactive_p99_fifo_s", "interactive_p99_strategy_s",
+    "interactive_p99_chunked_s",
+}
+ABSOLUTE = {"max_err"}
+#: wall-clock of whole benchmark phases — too machine-dependent to gate
+IGNORED = {"wall_seconds"}
+
+
+def collect(node, path="") -> Dict[str, Tuple[str, float]]:
+    """Flatten to {path: (kind, value)} for every gated numeric leaf."""
+    out: Dict[str, Tuple[str, float]] = {}
+    if isinstance(node, dict):
+        for k, v in node.items():
+            p = f"{path}/{k}"
+            if isinstance(v, (dict, list)):
+                out.update(collect(v, p))
+            elif isinstance(v, (int, float)) and not isinstance(v, bool):
+                if k in IGNORED:
+                    continue
+                if k in ABSOLUTE:
+                    out[p] = ("abs", float(v))
+                elif k in HIGHER_BETTER:
+                    out[p] = ("high", float(v))
+                elif k in LOWER_BETTER:
+                    out[p] = ("low", float(v))
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            out.update(collect(v, f"{path}/{i}"))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional regression (0.25 = 25%%)")
+    ap.add_argument("--strict-keys", action="store_true",
+                    help="also fail when a baseline metric vanished")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = collect(json.load(f))
+    with open(args.fresh) as f:
+        fresh = collect(json.load(f))
+
+    failures, notes = [], []
+    eps = 1e-12
+    for path, (kind, b) in sorted(base.items()):
+        if path not in fresh:
+            notes.append(f"metric vanished: {path}")
+            continue
+        _, v = fresh[path]
+        if kind == "abs":
+            limit = max(4 * b, 1e-3)
+            if v > limit:
+                failures.append(f"{path}: numerics {v:.3e} > limit "
+                                f"{limit:.3e} (baseline {b:.3e})")
+            continue
+        if abs(b) <= eps:
+            continue
+        ratio = v / b
+        if kind == "high" and ratio < 1 - args.tolerance:
+            failures.append(f"{path}: {v:.4g} is {(1 - ratio) * 100:.1f}% "
+                            f"below baseline {b:.4g}")
+        elif kind == "low" and ratio > 1 + args.tolerance:
+            failures.append(f"{path}: {v:.4g} is {(ratio - 1) * 100:.1f}% "
+                            f"above baseline {b:.4g}")
+
+    compared = len([p for p in base if p in fresh])
+    print(f"compared {compared} metrics "
+          f"({args.baseline} vs {args.fresh}, tolerance "
+          f"{args.tolerance * 100:.0f}%)")
+    for n in notes:
+        print(f"  note: {n}")
+    if failures:
+        print(f"PERF REGRESSION ({len(failures)}):", file=sys.stderr)
+        for msg in failures:
+            print(f"  {msg}", file=sys.stderr)
+        return 1
+    if args.strict_keys and notes:
+        print("FAIL: baseline metrics missing from fresh run",
+              file=sys.stderr)
+        return 1
+    print("OK: no regression beyond tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -62,5 +62,10 @@ if __name__ == "__main__":
               f"mean={c['mean_s']*1e3:.0f}ms")
     print(f"merged prefills: {m['merged_prefills']}  "
           f"dead evicted: {m['evicted_dead']}  steps: {m['steps']}")
+    if eng.paged:
+        eng.alloc.check()      # no leaked KV blocks after the drain
+        print(f"paged kv: {eng.alloc.total_blocks} x "
+              f"{eng.alloc.block_size}-token blocks, "
+              f"{eng.alloc.free_tokens} tokens free")
     assert cancelled.rid not in outs or not outs[cancelled.rid]
     assert all(r.state.name == "DONE" for r in interactive + batchy)

@@ -16,7 +16,9 @@ from ..core.device.request_scheduler import Request
 
 __all__ = ["Replica", "EngineReplica"]
 
-#: a migrated unit: the request plus its prompt tokens (None in simulation)
+#: a migrated unit: the request plus its payload — prompt tokens, or a dict
+#: ``{"tokens": ..., "kv": (k, v)}`` when a partially-prefilled chunk
+#: request migrates with its processed KV blocks (None in simulation)
 StolenItem = Tuple[Request, Optional[Any]]
 
 
@@ -73,7 +75,10 @@ class Replica:
 
 class EngineReplica(Replica):
     """A live serving replica: one ``ServingEngine`` (model + KV cache +
-    continuous batcher).  Prompt tokens travel with stolen requests."""
+    continuous batcher).  Prompt tokens travel with stolen requests; under
+    paged KV, a partially-prefilled request's processed blocks travel too
+    (steal-half-work migrates the *unprocessed* chunks plus the prefix KV,
+    so the thief resumes at the chunk boundary)."""
 
     def __init__(self, replica_id: int, engine,
                  place: Optional[int] = None):
@@ -110,6 +115,14 @@ class EngineReplica(Replica):
 
     def steal_waiting_count(self, n: int) -> List[StolenItem]:
         return self.engine.export_waiting(count=n)
+
+    # -- health --------------------------------------------------------------
+    def health(self) -> dict:
+        h = super().health()
+        if getattr(self.engine, "paged", False):
+            h["free_kv_tokens"] = self.engine.alloc.free_tokens
+            h["kv_requests"] = self.engine.alloc.num_requests
+        return h
 
     # -- engine loop ---------------------------------------------------------
     def step(self) -> int:

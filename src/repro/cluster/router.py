@@ -191,8 +191,11 @@ class ClusterRouter:
         for r, _ in stolen:
             weight += r.est_remaining_work
             self._owner[r.rid] = thief_idx
+        # rids let telemetry dedupe: with chunked prefill the same request
+        # can migrate again between chunks
         self.telemetry.record_steal(victim_idx, thief_idx,
-                                    len(stolen), weight)
+                                    len(stolen), weight,
+                                    rids=[r.rid for r, _ in stolen])
         return len(stolen)
 
     def steal_tick(self) -> int:

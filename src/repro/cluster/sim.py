@@ -57,7 +57,9 @@ class ServiceModel:
     decode_rate: float = 64.0        # generated tokens/s per decode slot
 
     def prefill_time(self, req: Request) -> float:
-        return req.prompt_len / self.prefill_rate
+        # remaining prefill only: a stolen (or chunked) request keeps its
+        # processed prefix — the KV blocks travel with the block table
+        return req.remaining_prefill / self.prefill_rate
 
     def service_time(self, req: Request) -> float:
         return self.prefill_time(req) + \
@@ -65,18 +67,28 @@ class ServiceModel:
 
 
 class SimReplica(Replica):
-    """Modeled replica: real batcher/strategies, simulated execution."""
+    """Modeled replica: real batcher/strategies, simulated execution.
+    ``prefill_chunk`` models chunked prefill: a long prompt occupies a slot
+    for one chunk's service time, then re-enters the strategy queue — where
+    an urgent arrival can overtake it, or a thief can steal it (the steal
+    then migrates its *unprocessed* chunks; the processed prefix travels
+    with the request, see :meth:`ServiceModel.prefill_time`)."""
 
     def __init__(self, replica_id: int, clock: SimClock,
                  service: Optional[ServiceModel] = None, slots: int = 4,
                  place: Optional[int] = None,
-                 merge_policy: Optional[MergePolicy] = None):
+                 merge_policy: Optional[MergePolicy] = None,
+                 prefill_chunk: Optional[int] = None,
+                 admission: str = "strategy"):
         super().__init__(replica_id, place)
         self.clock = clock
         self.service = service or ServiceModel()
         self.slots = slots
         self.batcher = ContinuousBatcher(max_batch=slots, now=clock.now,
-                                         merge_policy=merge_policy)
+                                         merge_policy=merge_policy,
+                                         prefill_chunk=prefill_chunk,
+                                         admission=admission,
+                                         place_id=replica_id)
         self.active = 0
         self.sim: Optional["Simulation"] = None   # bound by Simulation
 
@@ -109,17 +121,39 @@ class SimReplica(Replica):
 
     # -- modeled execution ---------------------------------------------------
     def dispatch(self) -> None:
-        """Fill free slots in strategy-priority order; schedule completions."""
+        """Fill free slots in strategy-priority order; schedule completions.
+        With chunked prefill, a mid-prompt request occupies the slot for one
+        chunk's service time only."""
         while self.active < self.slots:
             req = self.batcher.pop_next_waiting()
             if req is None:
                 break
+            chunk = self.batcher.chunk_tokens_for(req)
+            if chunk < req.remaining_prefill:
+                # the chunk occupies a slot: it IS load — track it in the
+                # running set so backlog_weight stays honest for placement
+                # and steal-surplus decisions
+                self.batcher.mark_running(req)
+                req.state = RequestState.PREFILL
+                self.active += 1
+                self.sim.after(chunk / self.service.prefill_rate,
+                               self._chunk_done, req, chunk)
+                continue
             self.batcher.mark_running(req)
             now = self.clock.now()
             req.first_token_at = now + self.service.prefill_time(req)
             self.active += 1
             self.sim.after(self.service.service_time(req),
                            self._complete, req)
+
+    def _chunk_done(self, req: Request, chunk: int) -> None:
+        """A non-final prefill chunk finished: the request re-enters the
+        waiting storage (strategy-ordered, stealable) for its remaining
+        chunks — the same bookkeeping the live engine uses."""
+        self.active -= 1
+        self.batcher.finish_running(req)
+        self.batcher.complete_prefill_chunk(req, chunk)
+        self.dispatch()
 
     def _complete(self, req: Request) -> None:
         self.active -= 1
@@ -189,25 +223,31 @@ class ClassSpec:
     share: float               # fraction of arrivals in this class
     mean_prompt_len: float
     mean_new_tokens: float
-    size_dist: str = "exponential"    # exponential | pareto
+    size_dist: str = "exponential"    # decode lens: exponential | pareto
     pareto_alpha: float = 1.5
+    prompt_dist: str = "exponential"  # prompt lens: exponential | pareto
+    prompt_pareto_alpha: float = 1.5
 
     def mean_service(self, service: ServiceModel) -> float:
         return self.mean_prompt_len / service.prefill_rate + \
             self.mean_new_tokens / service.decode_rate
 
+    @staticmethod
+    def _draw(rng, dist: str, mean: float, alpha: float, n: int):
+        if dist == "exponential":
+            return rng.exponential(mean, n)
+        if dist == "pareto":
+            # Lomax(alpha, scale); mean = scale/(alpha-1)
+            return rng.pareto(alpha, n) * (mean * (alpha - 1.0))
+        raise ValueError(f"unknown distribution {dist!r}")
+
     def sample_sizes(self, rng: np.random.Generator, n: int):
-        prompts = np.maximum(1, rng.exponential(
-            self.mean_prompt_len, n)).astype(np.int64)
-        if self.size_dist == "exponential":
-            toks = rng.exponential(self.mean_new_tokens, n)
-        elif self.size_dist == "pareto":
-            # Lomax(alpha, scale); mean = scale/(alpha-1) = mean_new_tokens
-            scale = self.mean_new_tokens * (self.pareto_alpha - 1.0)
-            toks = rng.pareto(self.pareto_alpha, n) * scale
-        else:
-            raise ValueError(f"unknown size_dist {self.size_dist!r}")
-        return prompts, np.maximum(1, toks).astype(np.int64)
+        prompts = self._draw(rng, self.prompt_dist, self.mean_prompt_len,
+                             self.prompt_pareto_alpha, n)
+        toks = self._draw(rng, self.size_dist, self.mean_new_tokens,
+                          self.pareto_alpha, n)
+        return (np.maximum(1, prompts).astype(np.int64),
+                np.maximum(1, toks).astype(np.int64))
 
 
 def default_workload(size_dist: str = "exponential",
@@ -268,6 +308,8 @@ def run_cluster_sim(num_replicas: int, num_requests: int,
                     machine: Optional[MachineModel] = None,
                     steal_interval: Optional[float] = 0.25,
                     merge_policy: Optional[MergePolicy] = None,
+                    prefill_chunk: Optional[int] = None,
+                    admission: str = "strategy",
                     seed: int = 0) -> ClusterTelemetry:
     """Build a simulated cluster, push a synthetic workload through the
     shared router policy code, return the telemetry."""
@@ -276,7 +318,9 @@ def run_cluster_sim(num_replicas: int, num_requests: int,
         default_workload(size_dist=size_dist, pareto_alpha=pareto_alpha)
     clock = SimClock()
     replicas = [SimReplica(i, clock, service, slots=slots,
-                           merge_policy=merge_policy)
+                           merge_policy=merge_policy,
+                           prefill_chunk=prefill_chunk,
+                           admission=admission)
                 for i in range(num_replicas)]
     telemetry = ClusterTelemetry(num_replicas)
     router = ClusterRouter(replicas, machine=machine, policy=policy,

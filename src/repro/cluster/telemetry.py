@@ -3,15 +3,19 @@
 Latencies go into log-spaced-bucket histograms (fixed memory per class no
 matter how many samples the discrete-event simulator pushes), keyed by SLO
 class (= the request's ``priority`` value).  The only per-request state is
-the finish-dedup id set (a few dozen MB at tens of millions of requests).  Steal events record
-both migrated request *count* and migrated *weight* — the distinction the
-steal-half-work vs steal-half-count comparison turns on.  ``summary()`` is
+the finish/migration dedup id sets (a few dozen MB at tens of millions of
+requests).  Steal events record both migrated request *count* and migrated
+*weight* — the distinction the steal-half-work vs steal-half-count
+comparison turns on.  With chunked prefill a request can migrate more than
+once (between chunks), so ``requests_migrated`` is deduped by request id
+(one request = one migrated request, however many of its chunks moved);
+``chunk_migrations`` keeps the raw per-migration count.  ``summary()`` is
 JSON-serializable and is what ``benchmarks/cluster_scale.py`` writes out.
 """
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -91,11 +95,13 @@ class ClusterTelemetry:
         self.replicas: List[_ReplicaStats] = [
             _ReplicaStats() for _ in range(num_replicas)]
         self.steal_events = 0
-        self.requests_migrated = 0
+        self.requests_migrated = 0      # unique requests (deduped by rid)
+        self.chunk_migrations = 0       # raw migrations (>= unique count)
         self.weight_migrated = 0
         self.cancelled = 0
         self.deadline_misses = 0
         self._seen: set = set()
+        self._migrated: set = set()
 
     # -- recording -----------------------------------------------------------
     def _hist(self, table: Dict[float, LatencyHistogram],
@@ -134,11 +140,22 @@ class ClusterTelemetry:
             self.deadline_misses += 1
 
     def record_steal(self, src: int, dst: int, requests: int,
-                     weight: int) -> None:
+                     weight: int,
+                     rids: Optional[Sequence[int]] = None) -> None:
+        """``rids`` enables dedup: with chunked prefill the same request can
+        be stolen again between chunks, and counting it once per migration
+        would overstate ``requests_migrated`` (per-replica ``*_out`` stats
+        stay raw — they describe traffic, not population)."""
         if requests <= 0:
             return
         self.steal_events += 1
-        self.requests_migrated += requests
+        self.chunk_migrations += requests
+        if rids is None:
+            self.requests_migrated += requests
+        else:
+            fresh = [r for r in rids if r not in self._migrated]
+            self._migrated.update(fresh)
+            self.requests_migrated += len(fresh)
         self.weight_migrated += weight
         self.replicas[src].steals_out += 1
         self.replicas[src].requests_migrated_out += requests
@@ -165,6 +182,7 @@ class ClusterTelemetry:
             "deadline_misses": self.deadline_misses,
             "steal_events": self.steal_events,
             "requests_migrated": self.requests_migrated,
+            "chunk_migrations": self.chunk_migrations,
             "weight_migrated": self.weight_migrated,
             "per_class": {str(k): self.class_percentiles(k)
                           for k in sorted(self.per_class)},

@@ -1,22 +1,32 @@
 """Continuous-batching request scheduler with per-request strategies.
 
-Serving requests ARE tasks: the paper's strategy fields map onto
+Serving requests ARE tasks — literally: every waiting request (and every
+pending prefill *chunk* of one) is a :class:`~repro.core.task.Task` in a
+:class:`~repro.core.task_storage.StrategyTaskStorage`, the same structure
+the paper's scheduler uses for its apps.  The strategy fields map onto
 
-* priority          — SLO class + deadline: admission order into the batch,
-* transitive weight — prompt length + estimated decode length: work estimate
-                      used for cross-replica steal-half-work rebalancing,
-* dead tasks        — cancelled / expired requests are evicted from queues
-                      and from the running batch before the next step,
-* spawn-to-call     — short prefills are merged ("chunked prefill") into a
-                      single fused step instead of each paying a scheduling
-                      round-trip.
+* priority          — SLO class + deadline: admission order into the batch
+                      (``admission="fifo"`` swaps in an arrival-ordered
+                      strategy — the baseline the paper argues against),
+* transitive weight — prompt tokens still to prefill + estimated decode
+                      length: the work estimate ``steal_batch`` consults for
+                      cross-replica steal-half-work rebalancing,
+* dead tasks        — cancelled / expired requests are pruned by the storage
+                      on pop/steal, never admitted, never migrated,
+* task merging      — prefills are merged ("chunked prefill") under the
+                      shared :class:`~repro.core.strategy.MergePolicy`; long
+                      prompts are split into chunk tasks that re-enter the
+                      storage between chunks (so a half-prefilled request can
+                      still be preempted by an urgent arrival, or stolen),
+* spawn-to-call     — single-token follow-ups (remaining prefill at or below
+                      ``spawn_to_call_tokens``) ride along with any planned
+                      chunk instead of paying their own scheduling round-trip.
 
 Host-level and model-agnostic: :meth:`ContinuousBatcher.plan_step` only
 produces the batch composition; the serving engine executes it.
 """
 from __future__ import annotations
 
-import heapq
 import itertools
 import time
 from dataclasses import dataclass, field
@@ -26,9 +36,12 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..strategy import MergePolicy, PriorityStrategy
+from ..task import FinishRegion, Task
+from ..task_storage import StrategyTaskStorage
 
-__all__ = ["Request", "RequestState", "RequestStrategy", "ContinuousBatcher",
-           "BatchPlan", "rebalance_replicas"]
+__all__ = ["Request", "RequestState", "RequestStrategy",
+           "FifoRequestStrategy", "ContinuousBatcher", "BatchPlan",
+           "rebalance_replicas"]
 
 _rid = itertools.count()
 
@@ -61,24 +74,34 @@ class Request:
         return max(self.prompt_len - self.prefilled, 0) + \
             max(self.max_new_tokens - self.generated, 0)
 
+    @property
+    def remaining_prefill(self) -> int:
+        return max(self.prompt_len - self.prefilled, 0)
+
     def cancel(self) -> None:
         if self.state not in (RequestState.DONE,):
             self.state = RequestState.CANCELLED
 
 
 class RequestStrategy(PriorityStrategy):
-    """Dead when cancelled or past its deadline."""
+    """SLO-class / deadline / arrival priority; dead when cancelled or past
+    its deadline; stolen heaviest-remaining-work first (migrating a request
+    has per-request cost, so a thief asked for N tokens of work should take
+    as few requests as possible — steal work, not count)."""
 
     __slots__ = ("request", "_now")
 
     def __init__(self, request: Request, now: Callable[[], float]):
-        key = (request.priority, request.deadline or np.inf, request.arrival)
-        super().__init__(priority=key,
+        super().__init__(priority=self._key(request),
                          transitive_weight=request.est_remaining_work)
         self.request = request
         self._now = now
 
-    # tuple priorities compare lexicographically
+    @staticmethod
+    def _key(request: Request):
+        # tuple priorities compare lexicographically
+        return (request.priority, request.deadline or np.inf, request.arrival)
+
     def is_dead(self) -> bool:
         r = self.request
         if r.state == RequestState.CANCELLED:
@@ -88,47 +111,90 @@ class RequestStrategy(PriorityStrategy):
             return True
         return False
 
+    def steal_prioritize(self, other) -> bool:
+        if isinstance(other, RequestStrategy):
+            mine = self.request.est_remaining_work
+            theirs = other.request.est_remaining_work
+            if mine != theirs:
+                return mine > theirs
+            return self.request.arrival < other.request.arrival
+        return super().steal_prioritize(other)
+
+
+class FifoRequestStrategy(RequestStrategy):
+    """Arrival-ordered admission, oblivious to SLO class and deadline — the
+    classic FIFO continuous-batching baseline (``admission="fifo"``)."""
+
+    __slots__ = ()
+
+    @staticmethod
+    def _key(request: Request):
+        return (request.arrival, request.rid)
+
 
 @dataclass
 class BatchPlan:
     """What the engine should run this step."""
     decode: List[Request] = field(default_factory=list)
     prefill: List[Request] = field(default_factory=list)   # merged chunk
+    #: rid -> prompt tokens to process this step (chunked prefill: may be
+    #: less than the request's remaining prompt)
+    prefill_chunks: Dict[int, int] = field(default_factory=dict)
     prefill_tokens: int = 0
     evicted: List[Request] = field(default_factory=list)
     admitted: List[Request] = field(default_factory=list)
 
 
-class _HeapItem:
-    __slots__ = ("strategy",)
-
-    def __init__(self, strategy: RequestStrategy):
-        self.strategy = strategy
-
-    def __lt__(self, other: "_HeapItem") -> bool:
-        return self.strategy.prioritize(other.strategy)
+def _noop() -> None:
+    """Body of a request task: execution belongs to the serving engine; the
+    storage only orders, prunes and steals."""
 
 
 class ContinuousBatcher:
     """One replica's scheduler.  ``max_batch`` bounds concurrent decode
-    slots; ``prefill_token_budget`` is the merged-prefill chunk size."""
+    slots; ``prefill_token_budget`` is the merged-prefill chunk size;
+    ``prefill_chunk`` (tokens) splits long prompts into chunk tasks (None =
+    whole-prompt prefill)."""
 
     def __init__(self, max_batch: int = 32, prefill_token_budget: int = 2048,
                  now: Callable[[], float] = time.monotonic,
-                 merge_policy: Optional[MergePolicy] = None):
+                 merge_policy: Optional[MergePolicy] = None,
+                 prefill_chunk: Optional[int] = None,
+                 admission: str = "strategy",
+                 spawn_to_call_tokens: int = 1,
+                 place_id: int = 0):
+        if admission not in ("strategy", "fifo"):
+            raise ValueError(f"unknown admission mode {admission!r}")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
         self.max_batch = max_batch
         self.prefill_token_budget = prefill_token_budget
+        self.prefill_chunk = prefill_chunk
+        self.admission = admission
+        self.spawn_to_call_tokens = spawn_to_call_tokens
         # The scheduler's task-merging thresholds, reused for request
         # admission: the merged-prefill chunk grows with waiting-queue depth
         # (a shallow queue admits prefills one by one — no latency cost for
         # merging nobody needs).
         self.merge_policy = merge_policy or MergePolicy()
         self.now = now
-        self._waiting: List[_HeapItem] = []
+        self._strategy_cls = (RequestStrategy if admission == "strategy"
+                              else FifoRequestStrategy)
+        #: engine hook: False forces whole-prompt prefill for a request
+        #: (e.g. prompts longer than the paged ring, which must go through
+        #: the ring-aligning dense prefill)
+        self.chunk_eligible: Callable[[Request], bool] = lambda r: True
+        #: engine hook: called when the storage prunes a dead request (the
+        #: engine releases its KV blocks / prompt buffers)
+        self.on_request_pruned: Optional[Callable[[Request], None]] = None
+        self.storage = StrategyTaskStorage(place_id, on_prune=self._on_prune)
+        self._region = FinishRegion()          # storage requires one; unused
+        self._tasks: Dict[int, Task] = {}      # rid -> waiting task
         self.running: Dict[int, Request] = {}
         self.metrics = {"admitted": 0, "evicted_dead": 0,
                         "merged_prefills": 0, "steps": 0,
-                        "deadline_misses": 0}
+                        "deadline_misses": 0, "prefill_chunks": 0,
+                        "calls_converted": 0, "preempted": 0}
         # thieves probe load counters far more often than queues mutate, so
         # the O(queue) scans are cached behind a mutation version stamp
         self._version = 0
@@ -138,6 +204,18 @@ class ContinuousBatcher:
     def _bump(self) -> None:
         self._version += 1
 
+    def _on_prune(self, task: Task) -> None:
+        """Storage pruned a dead request (pop/steal/claim paths)."""
+        req = task.strategy.request
+        self._tasks.pop(req.rid, None)
+        self.metrics["evicted_dead"] += 1
+        if req.deadline is not None and self.now() > req.deadline \
+                and req.state != RequestState.CANCELLED:
+            self.metrics["deadline_misses"] += 1
+        if self.on_request_pruned is not None:
+            self.on_request_pruned(req)
+        self._bump()
+
     def _load_counters(self) -> Tuple[int, int, int]:
         """(waiting_count, waiting_weight, running_weight), cached.  Dead
         requests (cancelled / deadline-expired) are excluded — they will
@@ -145,11 +223,12 @@ class ContinuousBatcher:
         be reflected one read late; every plan/pop/steal resyncs."""
         if self._cache_version != self._version:
             n = w = 0
-            for it in self._waiting:
-                if it.strategy.request.state == RequestState.WAITING \
-                        and not it.strategy.is_dead():
+            for task in self._tasks.values():
+                st = task.strategy
+                if st.request.state == RequestState.WAITING \
+                        and not st.is_dead():
                     n += 1
-                    w += it.strategy.request.est_remaining_work
+                    w += st.request.est_remaining_work
             rw = sum(r.est_remaining_work for r in self.running.values())
             self._cached = (n, w, rw)
             self._cache_version = self._version
@@ -157,8 +236,10 @@ class ContinuousBatcher:
 
     # -- queue ops ----------------------------------------------------------
     def submit(self, request: Request) -> None:
-        heapq.heappush(self._waiting,
-                       _HeapItem(RequestStrategy(request, self.now)))
+        task = Task(_noop, (), {}, self._strategy_cls(request, self.now),
+                    self._region)
+        self._tasks[request.rid] = task
+        self.storage.push(task)
         self._bump()
 
     def submit_many(self, requests: Sequence[Request]) -> None:
@@ -178,53 +259,53 @@ class ContinuousBatcher:
         c = self._load_counters()
         return c[1] + c[2]
 
-    def _live_waiting(self) -> List[_HeapItem]:
-        return [it for it in self._waiting
-                if it.strategy.request.state == RequestState.WAITING
-                and not it.strategy.is_dead()]
-
-    def _extract(self, take: List[_HeapItem]) -> List[Request]:
-        """Remove ``take`` from the waiting heap in one pass, pruning dead
-        requests on the way (they are never migrated)."""
-        taken = {id(it) for it in take}
-        live = [it for it in self._waiting
-                if id(it) not in taken
-                and it.strategy.request.state == RequestState.WAITING
-                and not it.strategy.is_dead()]
-        dead = len(self._waiting) - len(live) - len(take)
-        if dead:
-            self.metrics["evicted_dead"] += dead
-        if len(live) != len(self._waiting):
-            self._waiting = live
-            heapq.heapify(self._waiting)
+    def steal_waiting(self, target_weight: int,
+                      thief_id: int = -1) -> List[Request]:
+        """Remove waiting requests worth ~``target_weight`` for migration to
+        another replica — the paper's steal-half-work, delegated to the task
+        storage's ``steal_batch`` (heaviest-remaining-work steal order via
+        :meth:`RequestStrategy.steal_prioritize`; dead requests pruned, never
+        migrated).  Partially-prefilled requests migrate too: their processed
+        KV travels with them (the engine exports the chunk block tables)."""
+        stolen, _ = self.storage.steal_batch(thief_id, half_work=True,
+                                             target_weight=target_weight)
+        out = []
+        for task in stolen:
+            req = task.strategy.request
+            self._tasks.pop(req.rid, None)
+            out.append(req)
+        if stolen:
             self._bump()
-        return [it.strategy.request for it in take]
-
-    def steal_waiting(self, target_weight: int) -> List[Request]:
-        """Remove waiting requests worth ~``target_weight`` (largest-weight
-        first — steal work, not count) for migration to another replica."""
-        items = self._live_waiting()
-        items.sort(key=lambda it: -it.strategy.request.est_remaining_work)
-        take, got = [], 0
-        for it in items:
-            if got >= target_weight:
-                break
-            take.append(it)
-            got += it.strategy.request.est_remaining_work
-        return self._extract(take)
+        return out
 
     def steal_waiting_count(self, n: int) -> List[Request]:
         """Remove up to ``n`` waiting requests oldest-first (the classic
         FIFO steal order, oblivious to weight) for migration to another
         replica.  The steal-half-*count* baseline the paper argues against."""
-        items = self._live_waiting()
-        items.sort(key=lambda it: it.strategy.request.arrival)
-        return self._extract(items[:max(0, n)])
+        items = sorted(self._tasks.values(),
+                       key=lambda t: t.strategy.request.arrival)
+        out: List[Request] = []
+        for task in items:
+            if len(out) >= max(0, n):
+                break
+            if self.storage.claim(task):       # prunes dead on sight
+                req = task.strategy.request
+                self._tasks.pop(req.rid, None)
+                out.append(req)
+        if out:
+            self._bump()
+        return out
 
     def pop_next_waiting(self) -> Optional[Request]:
         """Public admission primitive: highest-strategy-priority live waiting
         request, with dead requests pruned (and counted) on the way."""
-        return self._pop_waiting()
+        task = self.storage.pop_local()
+        if task is None:
+            return None
+        req = task.strategy.request
+        self._tasks.pop(req.rid, None)
+        self._bump()
+        return req
 
     # -- external-executor hooks (the cluster simulator models execution
     #    itself, bypassing plan_step, but must keep load counters honest) --
@@ -238,6 +319,34 @@ class ContinuousBatcher:
         self._bump()
 
     # -- planning -----------------------------------------------------------
+    def chunk_tokens_for(self, request: Request) -> int:
+        """Prompt tokens the next prefill step of ``request`` processes."""
+        rem = request.remaining_prefill
+        if self.prefill_chunk is None or not self.chunk_eligible(request):
+            return rem
+        return min(rem, self.prefill_chunk)
+
+    def waiting_requests(self) -> List[Request]:
+        """Live waiting requests (preemption-victim scan; not an admission
+        API — admission goes through :meth:`pop_next_waiting`)."""
+        return [t.strategy.request for t in self._tasks.values()
+                if t.strategy.request.state == RequestState.WAITING
+                and not t.strategy.is_dead()]
+
+    def preempt_waiting(self, request: Request) -> bool:
+        """Recompute-preempt a *waiting* chunk-holder: claim it out of the
+        storage, drop its prefill progress (the engine frees the KV blocks)
+        and resubmit it unprefilled.  Returns False if it was already gone
+        (or died — pruned on sight)."""
+        task = self._tasks.get(request.rid)
+        if task is None or not self.storage.claim(task):
+            return False
+        self._tasks.pop(request.rid, None)
+        request.prefilled = 0
+        self.metrics["preempted"] += 1
+        self.submit(request)
+        return True
+
     def plan_step(self) -> BatchPlan:
         plan = BatchPlan()
         self.metrics["steps"] += 1
@@ -256,21 +365,28 @@ class ContinuousBatcher:
         max_prefill = self.merge_policy.chunk_size(self.waiting_count,
                                                    self.max_batch)
         while len(self.running) + len(plan.prefill) < self.max_batch:
-            req = self._pop_waiting()
+            req = self.pop_next_waiting()
             if req is None:
                 break
-            if req.prompt_len - req.prefilled > 0:
-                if plan.prefill and (
+            chunk = self.chunk_tokens_for(req)
+            if chunk > 0:
+                tiny = chunk <= self.spawn_to_call_tokens
+                if plan.prefill and not tiny and (
                         len(plan.prefill) >= max_prefill
-                        or plan.prefill_tokens
-                        + (req.prompt_len - req.prefilled)
+                        or plan.prefill_tokens + chunk
                         > self.prefill_token_budget):
                     # chunk full; leave for next step
                     self.submit(req)
                     break
+                if tiny and plan.prefill:
+                    # spawn-to-call: a single-token follow-up rides along
+                    # with the planned chunk instead of paying its own
+                    # scheduling round-trip (no budget/merge-cap check).
+                    self.metrics["calls_converted"] += 1
                 req.state = RequestState.PREFILL
                 plan.prefill.append(req)
-                plan.prefill_tokens += req.prompt_len - req.prefilled
+                plan.prefill_chunks[req.rid] = chunk
+                plan.prefill_tokens += chunk
             else:
                 req.state = RequestState.RUNNING
                 self.running[req.rid] = req
@@ -283,36 +399,44 @@ class ContinuousBatcher:
         self._bump()            # running-set / queue mutations above
         return plan
 
-    def _pop_waiting(self) -> Optional[Request]:
-        while self._waiting:
-            item = heapq.heappop(self._waiting)
-            self._bump()
-            strat = item.strategy
-            if strat.is_dead():
-                self.metrics["evicted_dead"] += 1
-                if strat.request.deadline is not None and \
-                        self.now() > strat.request.deadline:
-                    self.metrics["deadline_misses"] += 1
-                continue
-            if strat.request.state != RequestState.WAITING:
-                continue
-            return strat.request
-        return None
-
     # -- engine callbacks ----------------------------------------------------
+    def complete_prefill_chunk(self, request: Request, tokens: int) -> bool:
+        """A prefill chunk of ``tokens`` prompt tokens finished.  Returns
+        True when the whole prompt is now prefilled (the request moved to
+        the running batch); otherwise the request re-enters the waiting
+        storage as a fresh chunk task — where an urgent arrival can overtake
+        it, or a thief can steal it (with its processed KV)."""
+        request.prefilled = min(request.prompt_len,
+                                request.prefilled + tokens)
+        self.metrics["prefill_chunks"] += 1
+        if request.remaining_prefill > 0:
+            request.state = RequestState.WAITING
+            self.submit(request)
+            return False
+        request.state = RequestState.RUNNING
+        if request.first_token_at is None:
+            request.first_token_at = self.now()
+        self.running[request.rid] = request
+        self._bump()
+        return True
+
     def complete_prefill(self, requests: Sequence[Request]) -> None:
         for r in requests:
-            r.prefilled = r.prompt_len
-            r.state = RequestState.RUNNING
-            if r.first_token_at is None:
-                r.first_token_at = self.now()
-            self.running[r.rid] = r
-        self._bump()
+            self.complete_prefill_chunk(r, r.remaining_prefill)
 
     def complete_decode(self, requests: Sequence[Request]) -> None:
         for r in requests:
             r.generated += 1
         self._bump()
+
+    def preempt(self, request: Request) -> None:
+        """Recompute preemption: the engine dropped the request's KV (block
+        pool pressure); it restarts from an unprefilled waiting state."""
+        self.running.pop(request.rid, None)
+        request.prefilled = 0
+        request.state = RequestState.WAITING
+        self.metrics["preempted"] += 1
+        self.submit(request)
 
 
 def rebalance_replicas(batchers: Sequence[ContinuousBatcher]) -> int:

@@ -225,7 +225,9 @@ class StrategyTaskStorage:
 
     # -- stealer API ----------------------------------------------------------
     def steal_batch(self, stealer_id: int, *, half_work: bool = True,
-                    max_tasks: Optional[int] = None) -> Tuple[List[Task], int]:
+                    max_tasks: Optional[int] = None,
+                    target_weight: Optional[int] = None
+                    ) -> Tuple[List[Task], int]:
         """Steal in the stealer's (lazily cached) steal-priority order until
         half the *weighted* work has moved (``half_work=True``) or half the
         task count (``half_work=False``).  Returns (tasks, weight).
@@ -233,9 +235,16 @@ class StrategyTaskStorage:
         Either mode moves at most ``max(1, ready // 2)`` tasks per
         transaction: a degenerate weight distribution (e.g. every task at
         weight 0, making ``target_weight`` 0) can therefore never drain the
-        victim's whole queue in one steal."""
+        victim's whole queue in one steal.
+
+        ``target_weight`` overrides the half-the-work target with an explicit
+        weight goal (the serving batcher's cross-replica migration API, where
+        the router computes the surplus itself).  An explicit target lifts the
+        half-count clamp — the caller asked for that much work, so the steal
+        may drain the queue — and ``target_weight <= 0`` steals nothing."""
         with self._lock:
-            if self._ready == 0:
+            if self._ready == 0 or \
+                    (target_weight is not None and target_weight <= 0):
                 return [], 0
             view = self._views.get(stealer_id)
             if view is None:
@@ -259,8 +268,11 @@ class StrategyTaskStorage:
 
             # Weight target: half the queued work.  Count clamp: never more
             # than half the queued tasks (min 1), whichever bites first.
-            target_weight = max(1, self._ready_weight // 2)
-            target_count = max(1, self._ready // 2)
+            if target_weight is None:
+                target_weight = max(1, self._ready_weight // 2)
+                target_count = max(1, self._ready // 2)
+            else:
+                target_count = self._ready
             if max_tasks is not None:
                 target_count = min(target_count, max_tasks)
 
@@ -315,6 +327,21 @@ class StrategyTaskStorage:
                         free.append(item)
                 heapq.heapify(live)
                 view.heap = live
+
+    def claim(self, task: Task) -> bool:
+        """Claim one specific resident task (remove it from the storage's
+        accounting; heap/log entries go stale and are skipped lazily).  Used
+        by callers that need an ordering the steal heap does not provide —
+        e.g. the serving batcher's oldest-first FIFO-steal baseline.  Dead
+        tasks are pruned, not claimed.  Returns True iff claimed."""
+        with self._lock:
+            if not self._resident(task):
+                return False
+            if task.strategy.is_dead():
+                self._prune(task)
+                return False
+            self._claim(task)
+            return True
 
     # -- introspection ---------------------------------------------------------
     @property

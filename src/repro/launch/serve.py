@@ -1,6 +1,6 @@
-"""Serving driver: strategy-scheduled continuous batching.
+"""Serving driver: strategy-scheduled continuous batching over paged KV.
 
-Single replica:
+Single replica (paged KV + chunked prefill by default where supported):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
         --requests 16
@@ -9,10 +9,16 @@ Multi-replica (cluster router with configurable steal policy):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
         --replicas 2 --requests 16 --steal half_work
+
+CI equality gate (paged and contiguous KV must generate identical tokens):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --requests 8 --check-paged-equality
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -26,33 +32,100 @@ from ..models import build_model
 from ..serving import ServingEngine
 
 
-def _serve_single(args, model, params, cfg) -> None:
-    eng = ServingEngine(model, params, max_batch=args.max_batch,
-                        s_max=args.s_max)
+def _make_prompts(args, cfg):
     rng = np.random.default_rng(args.seed)
-    t0 = time.perf_counter()
-    reqs = []
-    for i in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab_size, int(rng.integers(4, 48)))
-        reqs.append(eng.submit(prompt,
-                               max_new_tokens=args.max_new_tokens,
-                               priority=float(i % 3)))
+    return [rng.integers(0, cfg.vocab_size, int(rng.integers(4, 48)))
+            for _ in range(args.requests)]
+
+
+def _engine_kw(args):
+    return dict(max_batch=args.max_batch, s_max=args.s_max,
+                kv_mode=args.kv, block_size=args.block_size,
+                num_blocks=args.num_blocks,
+                prefill_chunk=args.prefill_chunk,
+                admission=args.admission)
+
+
+def _run_engine(eng, prompts, args):
+    reqs = [eng.submit(p, max_new_tokens=args.max_new_tokens,
+                       priority=float(i % 3))
+            for i, p in enumerate(prompts)]
     outs = eng.run_until_drained()
+    return reqs, outs
+
+
+def _serve_single(args, model, params, cfg) -> None:
+    eng = ServingEngine(model, params, **_engine_kw(args))
+    t0 = time.perf_counter()
+    reqs, outs = _run_engine(eng, _make_prompts(args, cfg), args)
     dt = time.perf_counter() - t0
     done = sum(1 for r in reqs if r.state.name == "DONE")
     toks = sum(len(outs[r.rid]) for r in reqs)
     m = eng.batcher.metrics
     print(f"completed {done}/{len(reqs)} requests, {toks} tokens in "
-          f"{dt:.2f}s ({toks / dt:.1f} tok/s)")
+          f"{dt:.2f}s ({toks / dt:.1f} tok/s) [kv={eng.kv_mode}]")
     print(f"scheduler: steps={m['steps']} merged_prefills="
-          f"{m['merged_prefills']} evicted_dead={m['evicted_dead']}")
+          f"{m['merged_prefills']} prefill_chunks={m['prefill_chunks']} "
+          f"evicted_dead={m['evicted_dead']} preempted={m['preempted']}")
+    if eng.paged:
+        eng.alloc.check()
+        print(f"paged kv: {eng.alloc.total_blocks} blocks x "
+              f"{eng.alloc.block_size} tokens, "
+              f"{eng.alloc.free_tokens} tokens free at drain")
+
+
+def _check_paged_equality(args, model, params, cfg) -> int:
+    """CI gate: the paged engine must generate exactly what the contiguous
+    engine generates (fp32 bit-identical; bf16 identical in practice since
+    the gathered logical views match the dense cache bit-for-bit).  Also
+    runs the chunked-prefill paged engine — numerics-gated: every request
+    must finish with the same token count, and token mismatches (argmax
+    tie flips at chunk boundaries) are reported."""
+    prompts = _make_prompts(args, cfg)
+    results = {}
+    for mode, over in [
+            ("contiguous", dict(kv_mode="contiguous", prefill_chunk=None)),
+            ("paged", dict(kv_mode="paged", prefill_chunk=None)),
+            ("paged+chunked", dict(kv_mode="paged",
+                                   prefill_chunk=args.prefill_chunk or 8))]:
+        if mode != "contiguous" and not model.supports_paged:
+            print(f"{mode}: family {cfg.family!r} has no paged path — skip")
+            continue
+        kw = dict(_engine_kw(args), **over)   # --num-blocks etc. flow in
+        eng = ServingEngine(model, params, **kw)
+        reqs, outs = _run_engine(eng, prompts, args)
+        assert all(r.state.name == "DONE" for r in reqs), mode
+        if eng.paged:
+            eng.alloc.check()
+        results[mode] = [outs[r.rid] for r in reqs]
+        print(f"{mode}: {sum(len(o) for o in results[mode])} tokens")
+    if "paged" not in results:
+        return 0
+    if results["paged"] != results["contiguous"]:
+        bad = sum(1 for a, b in zip(results["paged"],
+                                    results["contiguous"]) if a != b)
+        print(f"FAIL: paged vs contiguous decode mismatch on {bad}/"
+              f"{len(prompts)} requests", file=sys.stderr)
+        return 1
+    print("OK: paged decode == contiguous decode "
+          f"({len(prompts)} requests)")
+    chunked = results.get("paged+chunked")
+    if chunked is not None:
+        lens_ok = [len(a) for a in chunked] == \
+            [len(a) for a in results["contiguous"]]
+        if not lens_ok:
+            print("FAIL: chunked prefill changed token counts",
+                  file=sys.stderr)
+            return 1
+        same = chunked == results["contiguous"]
+        print(f"OK: chunked prefill token counts match "
+              f"(token-exact: {same})")
+    return 0
 
 
 def _serve_cluster(args, model, params, cfg) -> None:
     replicas = [
-        EngineReplica(i, ServingEngine(model, params,
-                                       max_batch=args.max_batch,
-                                       s_max=args.s_max))
+        EngineReplica(i, ServingEngine(model, params, **_engine_kw(args)))
         for i in range(args.replicas)]
     policy = StealPolicy(amount=args.steal, placement=args.placement)
     router = ClusterRouter(replicas, policy=policy,
@@ -76,10 +149,12 @@ def _serve_cluster(args, model, params, cfg) -> None:
     print(router.telemetry.report())
     for h in router.health():
         print(f"  replica {h['replica_id']}: backlog={h['backlog_weight']} "
-              f"waiting={h['waiting']} active={h['active']}")
+              f"waiting={h['waiting']} active={h['active']}"
+              + (f" free_kv={h['free_kv_tokens']}"
+                 if "free_kv_tokens" in h else ""))
 
 
-def main() -> None:
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--requests", type=int, default=16)
@@ -92,6 +167,22 @@ def main() -> None:
     ap.add_argument("--placement", default="round_robin",
                     choices=["round_robin", "random", "least_of_d",
                              "least_work", "slo_aware"])
+    # Paged KV: the default "auto" pages every family with a paged decode
+    # path (dense/MoE/VLM/hybrid) and falls back to the dense per-slot
+    # cache elsewhere (SSM, enc-dec).
+    ap.add_argument("--kv", default="auto",
+                    choices=["auto", "paged", "contiguous"])
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=None)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill: tokens per chunk task "
+                         "(paged mode, chunk-capable families)")
+    ap.add_argument("--admission", default="strategy",
+                    choices=["strategy", "fifo"],
+                    help="fifo = arrival-ordered admission baseline")
+    ap.add_argument("--check-paged-equality", action="store_true",
+                    help="CI gate: paged and contiguous engines must "
+                         "generate identical tokens (exit 1 on mismatch)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     # Pallas kernels on the hot path: flash prefill/decode + grouped-matmul
@@ -114,11 +205,14 @@ def main() -> None:
         cfg = cfg.replace(use_flash=args.use_flash)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
+    if args.check_paged_equality:
+        return _check_paged_equality(args, model, params, cfg)
     if args.replicas > 1:
         _serve_cluster(args, model, params, cfg)
     else:
         _serve_single(args, model, params, cfg)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

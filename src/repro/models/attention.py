@@ -17,12 +17,23 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from .layers import apply_rope, init_linear, init_rms_norm, linear, rms_norm
 
-__all__ = ["init_attention", "attention_fwd", "attention_decode", "KVCache"]
+__all__ = ["init_attention", "attention_fwd", "attention_decode", "KVCache",
+           "PagedKVCache", "attention_decode_paged",
+           "attention_prefill_chunk_paged", "init_paged_kv_cache"]
 
 
 class KVCache(NamedTuple):
     k: jax.Array   # [B, S_max, kvH, hd]
     v: jax.Array   # [B, S_max, kvH, hd]
+
+
+class PagedKVCache(NamedTuple):
+    """Shared physical block pool: logical slot ``s`` of a request lives at
+    ``pool[table[s // bs], s % bs]`` where ``table`` is the request's block
+    table (``serving.paged_kv`` owns the accounting; block 0 is the write
+    sink for empty batch slots and is always masked)."""
+    k: jax.Array   # [num_blocks, block_size, kvH, hd]
+    v: jax.Array   # [num_blocks, block_size, kvH, hd]
 
 
 def init_attention(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
@@ -183,6 +194,36 @@ def attention_fwd(p: dict, x: jax.Array, cfg: ModelConfig,
     return y
 
 
+def _attend_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                   pos_vec: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """One query token per sequence over a dense logical cache view
+    ``[B, cap, kvH, hd]`` at per-sequence positions.  Shared by the
+    contiguous and paged decode paths: identical view widths and masks make
+    the two bit-identical in fp32."""
+    s_max = k_cache.shape[1]
+    hd = cfg.resolved_head_dim
+    if cfg.use_flash:
+        # Flash decode: one query row, non-causal, per-sequence valid-kv
+        # count.  Cache slots are filled 0..pos before wrap and the whole
+        # ring is live after (window eviction == ring eviction), so the
+        # count is min(pos+1, ring size) — slot order does not matter
+        # (RoPE is applied at projection, attention is kv-permutation
+        # invariant).
+        from ..kernels.flash_attention.ops import flash_attention
+        kv_valid = jnp.minimum(pos_vec + 1, s_max).astype(jnp.int32)
+        return flash_attention(q, k_cache, v_cache, kv_valid,
+                               causal=False, scale=hd ** -0.5)
+    # valid positions per sequence: j <= pos (within window when sliding)
+    j = jnp.arange(s_max)[None, :]
+    pcol = pos_vec[:, None]
+    valid = j <= pcol
+    if cfg.sliding_window is not None:
+        valid = (pcol - j < cfg.sliding_window) & (j <= pcol)
+        valid |= s_max <= pcol   # wrapped: the whole ring is valid
+    mask = valid[:, None, :]
+    return _sdpa(q, k_cache, v_cache, mask, hd ** -0.5)
+
+
 def attention_decode(p: dict, x: jax.Array, cache: KVCache, pos: jax.Array,
                      cfg: ModelConfig) -> tuple[jax.Array, KVCache]:
     """One-token decode.  x: [B, 1, D]; pos: [] or [B] current position
@@ -191,7 +232,6 @@ def attention_decode(p: dict, x: jax.Array, cache: KVCache, pos: jax.Array,
     sliding window)."""
     b = x.shape[0]
     s_max = cache.k.shape[1]
-    hd = cfg.resolved_head_dim
     pos_vec = jnp.broadcast_to(jnp.asarray(pos).reshape(-1), (b,))
     positions = pos_vec[:, None]
     q, k_new, v_new = _project_qkv(p, x, cfg, positions)
@@ -202,30 +242,75 @@ def attention_decode(p: dict, x: jax.Array, cache: KVCache, pos: jax.Array,
         k_new[:, 0].astype(cache.k.dtype))
     v_cache = cache.v.at[bidx, write_idx].set(
         v_new[:, 0].astype(cache.v.dtype))
-    if cfg.use_flash:
-        # Flash decode: one query row, non-causal, per-sequence valid-kv
-        # count.  Cache slots are filled 0..pos before wrap and the whole
-        # ring is live after (window eviction == ring eviction), so the
-        # count is min(pos+1, ring size) — slot order does not matter
-        # (RoPE is applied at projection, attention is kv-permutation
-        # invariant).
-        from ..kernels.flash_attention.ops import flash_attention
-        kv_valid = jnp.minimum(pos_vec + 1, s_max).astype(jnp.int32)
-        out = flash_attention(q, k_cache, v_cache, kv_valid,
-                              causal=False, scale=hd ** -0.5)
-    else:
-        # valid positions per sequence: j <= pos (within window when
-        # sliding)
-        j = jnp.arange(s_max)[None, :]
-        pcol = pos_vec[:, None]
-        valid = j <= pcol
-        if cfg.sliding_window is not None:
-            valid = (pcol - j < cfg.sliding_window) & (j <= pcol)
-            valid |= s_max <= pcol   # wrapped: the whole ring is valid
-        mask = valid[:, None, :]
-        out = _sdpa(q, k_cache, v_cache, mask, hd ** -0.5)
+    out = _attend_decode(q, k_cache, v_cache, pos_vec, cfg)
     y = linear(p["wo"], out.reshape(b, 1, -1))
     return y, KVCache(k_cache, v_cache)
+
+
+def attention_decode_paged(p: dict, x: jax.Array, cache: PagedKVCache,
+                           table: jax.Array, pos: jax.Array,
+                           cfg: ModelConfig) -> tuple[jax.Array, PagedKVCache]:
+    """One-token decode reading/writing K/V through per-request block tables
+    over the shared physical pool.  ``table``: [B, max_blocks] int32 physical
+    block ids (logical block ``j`` of sequence ``b`` at ``table[b, j]``;
+    unallocated entries point at the sink block, whose contents are never
+    unmasked).  Semantics — including the sliding-window ring — match
+    :func:`attention_decode` over a contiguous cache of capacity
+    ``cap = max_blocks * block_size``: the gathered logical view has the
+    same width, mask and values, so fp32 decode is bit-identical."""
+    b = x.shape[0]
+    bs = cache.k.shape[1]
+    cap = table.shape[1] * bs
+    pos_vec = jnp.broadcast_to(jnp.asarray(pos).reshape(-1), (b,))
+    positions = pos_vec[:, None]
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    # ring slot -> (physical block, offset); empty batch slots hit the sink
+    slot = pos_vec % cap
+    blk = jnp.take_along_axis(table, (slot // bs)[:, None], axis=1)[:, 0]
+    off = slot % bs
+    k_pool = cache.k.at[blk, off].set(k_new[:, 0].astype(cache.k.dtype))
+    v_pool = cache.v.at[blk, off].set(v_new[:, 0].astype(cache.v.dtype))
+    # gather the per-sequence logical view [B, cap, kvH, hd]
+    k_log = k_pool[table].reshape(b, cap, *cache.k.shape[2:])
+    v_log = v_pool[table].reshape(b, cap, *cache.v.shape[2:])
+    out = _attend_decode(q, k_log, v_log, pos_vec, cfg)
+    y = linear(p["wo"], out.reshape(b, 1, -1))
+    return y, PagedKVCache(k_pool, v_pool)
+
+
+def attention_prefill_chunk_paged(p: dict, x: jax.Array, cache: PagedKVCache,
+                                  table_row: jax.Array, start: jax.Array,
+                                  cfg: ModelConfig
+                                  ) -> tuple[jax.Array, PagedKVCache]:
+    """Prefill one chunk of a single request's prompt against its paged KV:
+    query rows are absolute positions ``start .. start+c-1``; the chunk's
+    K/V are scattered into the request's blocks, then attention runs over
+    the full logical view (history + chunk) under a bottom-right causal
+    mask.  x: [1, c, D]; table_row: [max_blocks] int32; start: [] int32.
+    Requires ``start + c <= cap`` (no ring wrap mid-prompt — the engine
+    falls back to whole-prompt prefill otherwise).  Always uses the masked
+    XLA path: the flash kernel's ``q_offset`` is static, and recompiling per
+    chunk boundary would cost more than the chunk."""
+    b, c, _ = x.shape
+    bs = cache.k.shape[1]
+    cap = table_row.shape[0] * bs
+    hd = cfg.resolved_head_dim
+    start = jnp.asarray(start, jnp.int32)
+    rows = start + jnp.arange(c, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, rows[None, :])
+    blk = table_row[rows // bs]
+    off = rows % bs
+    k_pool = cache.k.at[blk, off].set(k_new[0].astype(cache.k.dtype))
+    v_pool = cache.v.at[blk, off].set(v_new[0].astype(cache.v.dtype))
+    k_log = k_pool[table_row][None].reshape(1, cap, *cache.k.shape[2:])
+    v_log = v_pool[table_row][None].reshape(1, cap, *cache.v.shape[2:])
+    j = jnp.arange(cap, dtype=jnp.int32)[None, None, :]  # logical col == pos
+    valid = j <= rows[None, :, None]
+    if cfg.sliding_window is not None:
+        valid &= rows[None, :, None] - j < cfg.sliding_window
+    out = _sdpa(q, k_log, v_log, valid, hd ** -0.5)
+    y = linear(p["wo"], out.reshape(b, c, -1))
+    return y, PagedKVCache(k_pool, v_pool)
 
 
 def init_kv_cache(cfg: ModelConfig, batch: int, s_max: int,
@@ -235,3 +320,9 @@ def init_kv_cache(cfg: ModelConfig, batch: int, s_max: int,
         s_max = min(s_max, cfg.sliding_window)
     shape = (batch, s_max, cfg.num_kv_heads, hd)
     return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def init_paged_kv_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                        dtype=jnp.bfloat16) -> PagedKVCache:
+    shape = (num_blocks, block_size, cfg.num_kv_heads, cfg.resolved_head_dim)
+    return PagedKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))

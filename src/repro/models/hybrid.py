@@ -16,7 +16,9 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from .attention import KVCache, attention_decode, attention_fwd, init_attention, init_kv_cache
+from .attention import (KVCache, PagedKVCache, attention_decode,
+                        attention_decode_paged, attention_fwd,
+                        init_attention, init_kv_cache, init_paged_kv_cache)
 from .layers import (dtype_of, embed, init_embedding, init_linear, init_mlp,
                      init_rms_norm, linear, mlp, rms_norm)
 from .moe import MoEStats, init_moe, moe_fwd
@@ -24,11 +26,23 @@ from .ssm import MambaState, init_mamba, mamba_decode, mamba_fwd
 from .transformer import LMOutputs
 
 __all__ = ["init_hybrid_lm", "hybrid_forward", "hybrid_prefill",
-           "hybrid_decode_step", "init_hybrid_cache", "HybridCache"]
+           "hybrid_decode_step", "init_hybrid_cache", "HybridCache",
+           "hybrid_insert_prefill", "HybridPagedCache",
+           "init_hybrid_paged_cache", "hybrid_decode_step_paged",
+           "hybrid_insert_prefill_paged"]
 
 
 class HybridCache(NamedTuple):
     kv: KVCache          # [n_sb, B, S, kvH, hd] (one attn layer / superblock)
+    conv: jax.Array      # [n_sb, n_mamba, B, dc-1, di]
+    h: jax.Array         # [n_sb, n_mamba, B, di, ds]
+
+
+class HybridPagedCache(NamedTuple):
+    """Paged hybrid cache: only the attention KV (the part that grows with
+    context) is paged; Mamba conv/ssm states are O(1) per sequence and stay
+    slot-indexed on the batch axis."""
+    kv: PagedKVCache     # [n_sb, num_blocks, bs, kvH, hd]
     conv: jax.Array      # [n_sb, n_mamba, B, dc-1, di]
     h: jax.Array         # [n_sb, n_mamba, B, di, ds]
 
@@ -207,3 +221,102 @@ def hybrid_decode_step(params: dict, token: jax.Array, cache: HybridCache,
                   cache.conv, cache.h), unroll=cfg.unroll_scans)
     x = rms_norm(params["ln_f"], x, cfg.norm_eps)
     return linear(params["lm_head"], x), HybridCache(kv, conv, h)
+
+
+def hybrid_insert_prefill(cache: HybridCache, dense: HybridCache,
+                          slot, cfg: ModelConfig) -> HybridCache:
+    """Insert one request's prefill cache (B=1) into batch slot ``slot`` of
+    the engine's contiguous cache.  The batch axis differs per leaf — KV
+    carries it on axis 1, Mamba conv/ssm states on axis 2 — so a uniform
+    tree-map over one axis would corrupt neighbouring slots' Mamba states."""
+    put = lambda full, one, ax: jax.lax.dynamic_update_slice_in_dim(
+        full, one.astype(full.dtype), slot, ax)
+    return HybridCache(
+        kv=KVCache(put(cache.kv.k, dense.kv.k, 1),
+                   put(cache.kv.v, dense.kv.v, 1)),
+        conv=put(cache.conv, dense.conv, 2),
+        h=put(cache.h, dense.h, 2))
+
+
+# --------------------------------------------------------------------------
+# Paged KV (attention superblocks page; Mamba states stay slot-dense)
+# --------------------------------------------------------------------------
+
+def init_hybrid_paged_cache(cfg: ModelConfig, batch: int, num_blocks: int,
+                            block_size: int) -> HybridPagedCache:
+    sb, _, _ = _positions(cfg)
+    n_sb = cfg.num_layers // sb
+    n_mamba = sb - 1
+    dt = dtype_of(cfg)
+    one = init_paged_kv_cache(cfg, num_blocks, block_size, dt)
+    rep = lambda a: jnp.broadcast_to(a[None], (n_sb,) + a.shape).copy()
+    return HybridPagedCache(
+        kv=PagedKVCache(rep(one.k), rep(one.v)),
+        conv=jnp.zeros((n_sb, n_mamba, batch, cfg.mamba_d_conv - 1,
+                        cfg.mamba_d_inner), dt),
+        h=jnp.zeros((n_sb, n_mamba, batch, cfg.mamba_d_inner,
+                     cfg.mamba_d_state), jnp.float32))
+
+
+def _superblock_decode_paged(p: dict, x, kv: PagedKVCache, conv, h, table,
+                             pos, cfg: ModelConfig):
+    new_kv = kv
+    new_conv, new_h = [], []
+    mi = 0
+    for layer in p["layers"]:
+        z = rms_norm(layer["ln1"], x, cfg.norm_eps)
+        if "attn" in layer:
+            y, new_kv = attention_decode_paged(layer["attn"], z, kv, table,
+                                               pos, cfg)
+            x = x + y
+        else:
+            st = MambaState(conv=conv[mi], h=h[mi])
+            y, st2 = mamba_decode(layer["mamba"], z, cfg, st)
+            new_conv.append(st2.conv)
+            new_h.append(st2.h)
+            mi += 1
+            x = x + y
+        x, _ = _ffn(layer, x, cfg)
+    return x, new_kv, jnp.stack(new_conv), jnp.stack(new_h)
+
+
+def hybrid_decode_step_paged(params: dict, token: jax.Array,
+                             cache: HybridPagedCache, table: jax.Array,
+                             pos, cfg: ModelConfig):
+    """Paged hybrid decode: attention KV read through ``table``
+    [B, max_blocks]; conv/ssm states indexed by batch slot as before."""
+    x = embed(params["embed"], token, cfg.onehot_embed)
+
+    def body(hx, layer):
+        pl, kv_k, kv_v, conv, h = layer
+        y, kv, conv2, h2 = _superblock_decode_paged(
+            pl, hx, PagedKVCache(kv_k, kv_v), conv, h, table, pos, cfg)
+        return y, (kv, conv2, h2)
+
+    x, (kv, conv, h) = jax.lax.scan(
+        body, x, (params["superblocks"], cache.kv.k, cache.kv.v,
+                  cache.conv, cache.h), unroll=cfg.unroll_scans)
+    x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+    return linear(params["lm_head"], x), HybridPagedCache(
+        PagedKVCache(kv.k, kv.v), conv, h)
+
+
+def hybrid_insert_prefill_paged(cache: HybridPagedCache, dense: HybridCache,
+                                table_row: jax.Array, slot,
+                                cfg: ModelConfig) -> HybridPagedCache:
+    """Scatter a single request's contiguous prefill cache (B=1) into the
+    pool blockwise, and its Mamba states into batch slot ``slot``."""
+    nblk = table_row.shape[0]
+    bs = cache.kv.k.shape[2]
+    n_sb = cache.kv.k.shape[0]
+
+    def scatter(pool, full):
+        blocks = full[:, 0].reshape(n_sb, nblk, bs, *pool.shape[3:])
+        return pool.at[:, table_row].set(blocks.astype(pool.dtype))
+
+    conv = cache.conv.at[:, :, slot].set(
+        dense.conv[:, :, 0].astype(cache.conv.dtype))
+    h = cache.h.at[:, :, slot].set(dense.h[:, :, 0].astype(cache.h.dtype))
+    return HybridPagedCache(
+        PagedKVCache(scatter(cache.kv.k, dense.kv.k),
+                     scatter(cache.kv.v, dense.kv.v)), conv, h)

@@ -22,6 +22,24 @@ class Model:
     prefill: Callable[..., tuple]              # (params, batch, s_max)
     decode_step: Callable[..., tuple]          # (params, token, cache, pos)
     init_cache: Callable[..., Any]             # (batch, s_max) -> cache
+    #: contiguous slot insertion (cache, dense_cache_B1, slot) -> cache.
+    #: None = every cache leaf carries batch on the engine's batch_axis;
+    #: the hybrid overrides it (KV on axis 1, Mamba states on axis 2).
+    insert_prefill: Optional[Callable[..., Any]] = None
+    # Paged-KV serving paths (None where the family has no paged form —
+    # SSM/enc-dec fall back to the contiguous engine):
+    #   init_paged_cache(batch, num_blocks, block_size) -> pool cache
+    #   decode_step_paged(params, token, cache, table, pos)
+    #   insert_prefill_paged(cache, dense_cache_B1, table_row, slot)
+    #   prefill_chunk_paged(params, batch, cache, table_row, start)
+    init_paged_cache: Optional[Callable[..., Any]] = None
+    decode_step_paged: Optional[Callable[..., tuple]] = None
+    insert_prefill_paged: Optional[Callable[..., Any]] = None
+    prefill_chunk_paged: Optional[Callable[..., tuple]] = None
+
+    @property
+    def supports_paged(self) -> bool:
+        return self.decode_step_paged is not None
 
     def loss(self, params: dict, batch: dict) -> tuple[jax.Array, dict]:
         return lm_loss(self, params, batch)
@@ -40,6 +58,17 @@ def build_model(cfg: ModelConfig) -> Model:
                 p, tok, cache, pos, cfg),
             init_cache=lambda batch, s_max: transformer.init_lm_cache(
                 cfg, batch, s_max),
+            init_paged_cache=lambda batch, nb, bs:
+                transformer.init_lm_paged_cache(cfg, nb, bs),
+            decode_step_paged=lambda p, tok, cache, table, pos:
+                transformer.lm_decode_step_paged(p, tok, cache, table, pos,
+                                                 cfg),
+            insert_prefill_paged=lambda cache, dense, row, slot:
+                transformer.lm_insert_prefill_paged(cache, dense, row, slot,
+                                                    cfg),
+            prefill_chunk_paged=lambda p, b, cache, row, start:
+                transformer.lm_prefill_chunk_paged(p, b, cache, row, start,
+                                                   cfg),
         )
     if fam == "ssm":
         return Model(
@@ -64,6 +93,18 @@ def build_model(cfg: ModelConfig) -> Model:
                 p, tok, cache, pos, cfg),
             init_cache=lambda batch, s_max: hybrid.init_hybrid_cache(
                 cfg, batch, s_max),
+            insert_prefill=lambda cache, dense, slot:
+                hybrid.hybrid_insert_prefill(cache, dense, slot, cfg),
+            init_paged_cache=lambda batch, nb, bs:
+                hybrid.init_hybrid_paged_cache(cfg, batch, nb, bs),
+            decode_step_paged=lambda p, tok, cache, table, pos:
+                hybrid.hybrid_decode_step_paged(p, tok, cache, table, pos,
+                                                cfg),
+            insert_prefill_paged=lambda cache, dense, row, slot:
+                hybrid.hybrid_insert_prefill_paged(cache, dense, row, slot,
+                                                   cfg),
+            # chunked prefill needs Mamba state carry across chunks — the
+            # hybrid prefills whole prompts (still paged for decode)
         )
     if fam == "encdec":
         return Model(

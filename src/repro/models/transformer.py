@@ -14,14 +14,18 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from .attention import (KVCache, attention_decode, attention_fwd,
-                        init_attention, init_kv_cache)
+from .attention import (KVCache, PagedKVCache, attention_decode,
+                        attention_decode_paged, attention_fwd,
+                        attention_prefill_chunk_paged, init_attention,
+                        init_kv_cache, init_paged_kv_cache)
 from .layers import (dtype_of, embed, init_embedding, init_linear,
                      init_mlp, init_rms_norm, linear, mlp, rms_norm)
 from .moe import MoEStats, init_moe, moe_fwd
 
 __all__ = ["init_lm", "lm_forward", "lm_prefill", "lm_decode_step",
-           "init_lm_cache", "LMOutputs"]
+           "init_lm_cache", "LMOutputs", "init_lm_paged_cache",
+           "lm_decode_step_paged", "lm_prefill_chunk_paged",
+           "lm_insert_prefill_paged"]
 
 
 class LMOutputs(NamedTuple):
@@ -217,3 +221,100 @@ def lm_decode_step(params: dict, token: jax.Array, cache: KVCache,
                                 unroll=cfg.unroll_scans)
     x = rms_norm(params["ln_f"], x, cfg.norm_eps)
     return _unembed(params, x, cfg), new_cache
+
+
+# --------------------------------------------------------------------------
+# Paged KV: decode + chunked prefill through per-request block tables
+# --------------------------------------------------------------------------
+
+def init_lm_paged_cache(cfg: ModelConfig, num_blocks: int,
+                        block_size: int) -> PagedKVCache:
+    """Layer-stacked physical block pool [L, num_blocks, bs, kvH, hd]; the
+    block table (host-side, ``serving.paged_kv``) is shared across layers —
+    block id ``b`` names row ``b`` of every layer's pool."""
+    one = init_paged_kv_cache(cfg, num_blocks, block_size, dtype_of(cfg))
+    stack = lambda a: jnp.broadcast_to(a[None],
+                                       (cfg.num_layers,) + a.shape).copy()
+    return PagedKVCache(stack(one.k), stack(one.v))
+
+
+def _block_decode_paged(p: dict, x: jax.Array, cache: PagedKVCache, table,
+                        pos, cfg):
+    y_attn, new_cache = attention_decode_paged(
+        p["attn"], rms_norm(p["ln1"], x, cfg.norm_eps), cache, table, pos,
+        cfg)
+    h = x + y_attn
+    z = rms_norm(p["ln2"], h, cfg.norm_eps)
+    if _is_moe(cfg):
+        y, _ = moe_fwd(p["moe"], z, cfg, use_kernel=cfg.use_flash)
+    else:
+        y = mlp(p["mlp"], z)
+    return h + y, new_cache
+
+
+def lm_decode_step_paged(params: dict, token: jax.Array, cache: PagedKVCache,
+                         table: jax.Array, pos: jax.Array, cfg: ModelConfig):
+    """Paged decode: K/V read through ``table`` [B, max_blocks] instead of a
+    dense per-slot buffer.  Bit-identical (fp32) to :func:`lm_decode_step`
+    over a contiguous cache of the same logical capacity."""
+    x = embed(params["embed"], token, cfg.onehot_embed)
+
+    def body(h, layer):
+        pl, ck, cv = layer
+        y, new_c = _block_decode_paged(pl, h, PagedKVCache(ck, cv), table,
+                                       pos, cfg)
+        return y, new_c
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache.k, cache.v),
+                                unroll=cfg.unroll_scans)
+    x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+    return _unembed(params, x, cfg), PagedKVCache(new_cache.k, new_cache.v)
+
+
+def lm_prefill_chunk_paged(params: dict, batch: dict, cache: PagedKVCache,
+                           table_row: jax.Array, start: jax.Array,
+                           cfg: ModelConfig):
+    """Run one chunk of a single request's prompt (tokens [1, c]) against
+    its block table, scattering the chunk's K/V into the pool.  Returns
+    (last-position logits [1, 1, V], updated pool) — the logits only matter
+    on the final chunk (they seed the first generated token)."""
+    x = _embed_inputs(params, batch, cfg)
+
+    def body(h, layer):
+        pl, ck, cv = layer
+        z = rms_norm(pl["ln1"], h, cfg.norm_eps)
+        attn, new_c = attention_prefill_chunk_paged(
+            pl["attn"], z, PagedKVCache(ck, cv), table_row, start, cfg)
+        hh = h + attn
+        zz = rms_norm(pl["ln2"], hh, cfg.norm_eps)
+        if _is_moe(cfg):
+            y, _ = moe_fwd(pl["moe"], zz, cfg, use_kernel=cfg.use_flash)
+        else:
+            y = mlp(pl["mlp"], zz)
+        return hh + y, new_c
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache.k, cache.v),
+                                unroll=cfg.unroll_scans)
+    x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+    logits = _unembed(params, x[:, -1:], cfg)
+    return logits, PagedKVCache(new_cache.k, new_cache.v)
+
+
+def lm_insert_prefill_paged(cache: PagedKVCache, dense: KVCache,
+                            table_row: jax.Array, slot, cfg: ModelConfig
+                            ) -> PagedKVCache:
+    """Scatter a single request's contiguous prefill cache (ring-aligned
+    [L, 1, cap, kvH, hd], from :func:`lm_prefill`) into the pool blockwise.
+    Sink-padded table entries receive the (zero) tail blocks — harmless, the
+    sink is never unmasked.  ``slot`` is unused (the transformer keeps no
+    per-slot state beyond KV); hybrid's variant writes Mamba states there."""
+    del slot
+    nblk = table_row.shape[0]
+    bs = cache.k.shape[2]
+    lead = cache.k.shape[0]
+
+    def scatter(pool, full):
+        blocks = full[:, 0].reshape(lead, nblk, bs, *pool.shape[3:])
+        return pool.at[:, table_row].set(blocks.astype(pool.dtype))
+
+    return PagedKVCache(scatter(cache.k, dense.k), scatter(cache.v, dense.v))

@@ -1,3 +1,4 @@
 from .engine import ServingEngine
+from .paged_kv import SINK_BLOCK, BlockAllocator, PoolExhausted
 
-__all__ = ["ServingEngine"]
+__all__ = ["ServingEngine", "BlockAllocator", "PoolExhausted", "SINK_BLOCK"]

@@ -1,12 +1,24 @@
-"""Slot-based continuous-batching serving engine.
+"""Paged-KV continuous-batching serving engine.
 
 The strategy scheduler (``core/device/request_scheduler``) decides *what*
-runs each step — admission by priority, dead-request eviction, merged
-("spawn-to-call") prefills; this engine executes the plan against the model:
+runs each step — admission by priority, dead-request eviction, merged and
+chunked prefills; this engine executes the plan against the model.
 
-* a fixed pool of ``max_batch`` decode slots with a shared stacked cache,
-* per-request prefill (the merged chunk runs back-to-back before insertion),
-* one decode step advances every occupied slot.
+Two KV layouts (``kv_mode``):
+
+* ``"paged"`` (default where the family supports it) — a shared physical
+  pool of fixed-size KV blocks with per-request block tables
+  (``serving.paged_kv``).  Blocks are allocated on demand as a request's
+  context grows, admission is a *memory* decision (``free_tokens``), long
+  prompts prefill in chunks that re-enter the strategy queue between chunks
+  (an urgent arrival overtakes a half-prefilled bulk prompt; a thief steals
+  it *with* its processed KV blocks), and pool pressure preempts
+  (recompute) the least urgent holder instead of refusing admission.
+  Decode reads K/V through the block table — bit-identical (fp32) to the
+  contiguous path because the gathered logical view has the same width,
+  mask and values.
+* ``"contiguous"`` — the dense per-slot ``[B, S_max]`` cache (SSM/enc-dec
+  families, and the equality-gate baseline).
 
 Works with any family whose cache pytree carries the batch on a fixed axis
 (dense/MoE/VLM: axis 1 of [L, B, S, ...]; RWKV: axis 1).  CPU-runnable with
@@ -15,7 +27,7 @@ reduced configs — that is how the examples and tests drive it.
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +37,7 @@ from ..core.device.request_scheduler import (BatchPlan, ContinuousBatcher,
                                              Request, RequestState)
 from ..core.strategy import MergePolicy
 from ..models.model_zoo import Model
+from .paged_kv import BlockAllocator, PoolExhausted, SINK_BLOCK
 
 __all__ = ["ServingEngine"]
 
@@ -33,29 +46,96 @@ class ServingEngine:
     def __init__(self, model: Model, params, *, max_batch: int = 4,
                  s_max: int = 128, prefill_token_budget: int = 512,
                  batch_axis: int = 1, eos_token: Optional[int] = None,
-                 merge_policy: Optional[MergePolicy] = None):
+                 merge_policy: Optional[MergePolicy] = None,
+                 kv_mode: str = "auto", block_size: int = 16,
+                 num_blocks: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 admission: str = "strategy"):
+        if kv_mode not in ("auto", "paged", "contiguous"):
+            raise ValueError(f"unknown kv_mode {kv_mode!r}")
+        if kv_mode == "paged" and not model.supports_paged:
+            raise ValueError(
+                f"family {model.cfg.family!r} has no paged decode path")
+        if kv_mode == "auto":
+            kv_mode = "paged" if model.supports_paged else "contiguous"
         self.model = model
         self.params = params
         self.s_max = s_max
         self.batch_axis = batch_axis
         self.eos = eos_token
+        self.kv_mode = kv_mode
+        self.paged = kv_mode == "paged"
+        # chunked prefill only where the model has a chunk kernel (pure
+        # attention trunks; hybrid needs Mamba state carry across chunks)
+        chunk = prefill_chunk if (self.paged and
+                                  model.prefill_chunk_paged is not None) \
+            else None
         self.batcher = ContinuousBatcher(
             max_batch=max_batch, prefill_token_budget=prefill_token_budget,
-            merge_policy=merge_policy)
-        self.cache = model.init_cache(max_batch, s_max)
+            merge_policy=merge_policy, prefill_chunk=chunk,
+            admission=admission)
         self.slot_req: List[Optional[Request]] = [None] * max_batch
         self.slot_pos = np.zeros(max_batch, np.int64)
         self.last_token = jnp.zeros((max_batch, 1), jnp.int32)
         self.outputs: Dict[int, List[int]] = {}
         self.prompts: Dict[int, np.ndarray] = {}
-        self._decode = jax.jit(model.decode_step)
+        #: prefill requests of the CURRENT plan not yet executed — popped
+        #: out of the waiting storage, so the preemption victim scan must
+        #: see them separately (else a plan whose members jointly hold the
+        #: whole pool deadlocks: everyone defers to invisible holders)
+        self._pending_prefill: List[Request] = []
         # jit per distinct prompt length (lengths repeat across requests)
         self._prefill = jax.jit(lambda p, b: model.prefill(p, b, s_max))
+        self._prefill_chunk = None
+        if self.paged:
+            cfg = model.cfg
+            self.cap = s_max if cfg.sliding_window is None \
+                else min(s_max, cfg.sliding_window)
+            if self.cap % block_size:
+                raise ValueError(f"KV capacity {self.cap} not divisible by "
+                                 f"block_size {block_size}")
+            self.block_size = block_size
+            self.max_blocks = self.cap // block_size
+            if num_blocks is None:
+                # same physical memory as the dense cache (+ the sink)
+                num_blocks = max_batch * self.max_blocks + 1
+            if num_blocks < self.max_blocks + 1:
+                raise ValueError("pool smaller than one full ring: "
+                                 f"{num_blocks - 1} < {self.max_blocks}")
+            self.alloc = BlockAllocator(num_blocks, block_size)
+            self.cache = model.init_paged_cache(max_batch, num_blocks,
+                                                block_size)
+            self.table = np.full((max_batch, self.max_blocks), SINK_BLOCK,
+                                 np.int32)
+            # device-side table cache: re-uploaded only when the allocator
+            # or a slot assignment changed (most decode steps change
+            # neither)
+            self._table_dev = jnp.asarray(self.table)
+            self._alloc_seen = self.alloc.version
+            self._table_dirty = False
+            self._decode = jax.jit(model.decode_step_paged)
+            self._insert_prefill = jax.jit(model.insert_prefill_paged)
+            self._prefill_chunk = (jax.jit(model.prefill_chunk_paged)
+                                   if model.prefill_chunk_paged else None)
+            # prompts longer than the ring must take the ring-aligning
+            # dense prefill (chunks would wrap mid-prompt)
+            self.batcher.chunk_eligible = \
+                lambda r: r.prompt_len + 1 <= self.cap
+            self.batcher.on_request_pruned = self._on_pruned
+        else:
+            self.cache = model.init_cache(max_batch, s_max)
+            self._decode = jax.jit(model.decode_step)
+            self._insert = (jax.jit(model.insert_prefill)
+                            if model.insert_prefill is not None else None)
 
     # -- client API ----------------------------------------------------------
     def submit(self, tokens: np.ndarray, max_new_tokens: int,
                priority: float = 1.0,
                deadline: Optional[float] = None) -> Request:
+        if len(tokens) == 0:
+            # a zero-prefill request would be admitted straight into the
+            # running set with no slot, logits or last token to decode from
+            raise ValueError("empty prompt")
         req = Request(prompt_len=len(tokens), max_new_tokens=max_new_tokens,
                       priority=priority, deadline=deadline)
         self.prompts[req.rid] = np.asarray(tokens, np.int32)
@@ -63,26 +143,174 @@ class ServingEngine:
         self.batcher.submit(req)
         return req
 
-    def submit_request(self, req: Request, tokens: np.ndarray) -> None:
+    def submit_request(self, req: Request, payload: Any = None) -> None:
         """Register an externally-created request (cluster router placement
-        or a steal migration from another replica)."""
+        or a steal migration from another replica).  ``payload`` is the
+        prompt tokens, or a dict ``{"tokens": ..., "kv": (k, v),
+        "outputs": [...]}`` when a partially-prefilled (or previously
+        preempted) request migrates with its processed KV blocks and the
+        tokens it already emitted."""
+        kv = None
+        outputs: List[int] = []
+        if isinstance(payload, dict):
+            tokens = payload["tokens"]
+            kv = payload.get("kv")
+            outputs = list(payload.get("outputs", []))
+        else:
+            tokens = payload
+        if tokens is None or len(tokens) == 0:
+            raise ValueError("empty prompt")
         self.prompts[req.rid] = np.asarray(tokens, np.int32)
-        self.outputs.setdefault(req.rid, [])
+        self.outputs[req.rid] = outputs or self.outputs.get(req.rid, [])
+        if req.prefilled > 0:
+            if self.paged and kv is not None and self._import_kv(req, kv):
+                pass                        # prefix KV adopted into our pool
+            else:
+                req.prefilled = 0           # recompute the prefix
         self.batcher.submit(req)
 
     def export_waiting(self, target_weight: Optional[int] = None,
                        count: Optional[int] = None):
         """Yield waiting requests (with their prompt tokens) to a thief.
-        Only never-prefilled requests migrate, so no KV cache moves."""
+        Partially-prefilled chunk requests migrate with their processed KV
+        blocks (gathered out of the pool via their block table), so the
+        thief resumes at the chunk boundary instead of recomputing."""
         if target_weight is not None:
             stolen = self.batcher.steal_waiting(target_weight)
         else:
             stolen = self.batcher.steal_waiting_count(count or 0)
         out = []
         for r in stolen:
-            out.append((r, self.prompts.pop(r.rid)))
-            self.outputs.pop(r.rid, None)
+            payload: Dict[str, Any] = {"tokens": self.prompts.pop(r.rid)}
+            if self.paged and r.prefilled > 0:
+                kv = self._export_kv(r)
+                if kv is not None:
+                    payload["kv"] = kv
+            emitted = self.outputs.pop(r.rid, None)
+            if emitted:
+                # a previously-preempted request already emitted tokens
+                # (folded into the prompt): the client-visible stream must
+                # travel with it
+                payload["outputs"] = emitted
+            self._release(r.rid)
+            out.append((r, payload if len(payload) > 1
+                        else payload["tokens"]))
         return out
+
+    # -- paged-pool bookkeeping ----------------------------------------------
+    def _release(self, rid: int) -> None:
+        if self.paged:
+            self.alloc.release(rid)
+
+    def _on_pruned(self, req: Request) -> None:
+        """Batcher pruned a dead waiting request: free its blocks."""
+        self._release(req.rid)
+
+    def _export_kv(self, req: Request) -> Optional[Tuple[np.ndarray, ...]]:
+        # only chunk-capable (pure-attention) pools migrate prefix KV; the
+        # hybrid never parks a partially-prefilled request
+        if not hasattr(self.cache, "k"):
+            return None
+        blocks = self.alloc.blocks_of(req.rid)
+        need = self.alloc.blocks_for_tokens(req.prefilled)
+        if len(blocks) < need:
+            return None
+        idx = jnp.asarray(blocks[:need], jnp.int32)
+        return (np.asarray(self.cache.k[:, idx]),
+                np.asarray(self.cache.v[:, idx]))
+
+    def _import_kv(self, req: Request, kv) -> bool:
+        if not hasattr(self.cache, "k"):
+            return False
+        k_np, v_np = kv
+        nblk = k_np.shape[1]
+        if nblk > self.max_blocks or req.prompt_len + 1 > self.cap:
+            # victim had a larger ring than ours: the prefix cannot resume
+            # chunk-aligned here — recompute through the dense prefill
+            return False
+        if k_np.shape[2] != self.block_size or \
+                not self.alloc.can_allocate(nblk * self.block_size,
+                                            req.rid):
+            return False                     # thief pool full: recompute
+        self.alloc.ensure(req.rid, nblk * self.block_size)
+        idx = jnp.asarray(self.alloc.blocks_of(req.rid)[:nblk], jnp.int32)
+        self.cache = type(self.cache)(
+            self.cache.k.at[:, idx].set(jnp.asarray(k_np)),
+            self.cache.v.at[:, idx].set(jnp.asarray(v_np)))
+        return True
+
+    def _table_row(self, rid: int) -> np.ndarray:
+        return self.alloc.table_row(rid, self.max_blocks)
+
+    def _ensure_blocks(self, req: Request, tokens: int) -> bool:
+        """Grow ``req``'s block table to cover ``tokens`` logical tokens,
+        preempting less-urgent holders under pool pressure.  False when the
+        pool cannot serve even after preemption (caller defers)."""
+        tokens = min(tokens, self.cap)
+        while True:
+            try:
+                self.alloc.ensure(req.rid, tokens)
+                return True
+            except PoolExhausted:
+                if not self._preempt_for(req):
+                    return False
+
+    @staticmethod
+    def _urgency(r: Request) -> tuple:
+        """Total order: smaller = more urgent (rid breaks exact ties, so a
+        strictly-less-urgent victim always exists among distinct requests
+        unless the requester is the least urgent itself)."""
+        return (r.priority, r.arrival, r.rid)
+
+    def _preempt_for(self, req: Request) -> bool:
+        """Free blocks by recompute-preempting a STRICTLY less urgent
+        holder: waiting chunk-holders first (they only lose prefix
+        recompute), then running requests (they re-enter the queue with
+        their generated tokens folded into the prompt).  Never preempts
+        ``req`` itself or anything more urgent — a bulk request cannot
+        recompute-thrash an interactive one; if every holder outranks
+        ``req``, it defers instead."""
+        mine = self._urgency(req)
+        holders = [r for r in self.batcher.waiting_requests()
+                   if r.rid != req.rid and self.alloc.blocks_of(r.rid)
+                   and self._urgency(r) > mine]
+        if holders:
+            victim = max(holders, key=self._urgency)   # least urgent first
+            if self.batcher.preempt_waiting(victim):
+                self._release(victim.rid)
+                return True
+        # chunk-holders planned later in THIS step: not in the storage yet,
+        # so reclaim directly — their upcoming _run_prefill simply restarts
+        # from chunk 0
+        planned = [r for r in self._pending_prefill
+                   if r.rid != req.rid and self.alloc.blocks_of(r.rid)
+                   and self._urgency(r) > mine]
+        if planned:
+            victim = max(planned, key=self._urgency)
+            victim.prefilled = 0
+            self._release(victim.rid)
+            self.batcher.metrics["preempted"] += 1
+            return True
+        actives = [r for r in self.slot_req
+                   if r is not None and r.rid != req.rid
+                   and self._urgency(r) > mine]
+        if actives:
+            victim = max(actives, key=self._urgency)
+            self._preempt_running(victim)
+            return True
+        return False
+
+    def _preempt_running(self, req: Request) -> None:
+        """Recompute preemption of a decoding request: fold its generated
+        tokens into the prompt, drop its KV, requeue it."""
+        self._clear_slot(req)
+        out = self.outputs.get(req.rid, [])
+        if out:
+            self.prompts[req.rid] = np.concatenate(
+                [self.prompts[req.rid], np.asarray(out, np.int32)])
+            req.prompt_len = len(self.prompts[req.rid])
+        self._release(req.rid)
+        self.batcher.preempt(req)
 
     # -- engine loop ----------------------------------------------------------
     def _free_slot(self) -> Optional[int]:
@@ -91,8 +319,19 @@ class ServingEngine:
                 return i
         return None
 
-    def _insert(self, slot: int, req: Request, cache_one, last_tok,
-                pos: int) -> None:
+    def _clear_slot(self, req: Request) -> None:
+        for i, r in enumerate(self.slot_req):
+            if r is req:
+                self.slot_req[i] = None
+                if self.paged:
+                    self.table[i, :] = SINK_BLOCK
+                    self._table_dirty = True
+
+    def _insert_contiguous(self, slot: int, cache_one) -> None:
+        if self._insert is not None:
+            # per-leaf batch axes (hybrid: KV axis 1, Mamba states axis 2)
+            self.cache = self._insert(self.cache, cache_one, slot)
+            return
         ax = self.batch_axis
 
         def put(full, one):
@@ -101,40 +340,126 @@ class ServingEngine:
             return full.at[tuple(idx)].set(one.astype(full.dtype))
 
         self.cache = jax.tree.map(put, self.cache, cache_one)
+
+    def _take_slot(self, slot: int, req: Request, last_tok: int,
+                   pos: int) -> None:
         self.slot_req[slot] = req
         self.slot_pos[slot] = pos
         self.last_token = self.last_token.at[slot, 0].set(last_tok)
+        if self.paged:
+            self.table[slot] = self._table_row(req.rid)
+            self._table_dirty = True
 
-    def step(self) -> int:
-        """One engine step: evict, admit+prefill, decode.  Returns the
-        number of active slots stepped."""
-        plan: BatchPlan = self.batcher.plan_step()
-        for req in plan.evicted:
-            for i, r in enumerate(self.slot_req):
-                if r is req:
-                    self.slot_req[i] = None
-        # merged prefill chunk: run each prompt, insert into a free slot
-        for req in plan.prefill:
+    def _requeue(self, req: Request) -> bool:
+        """Back to the waiting storage (lost slot / pool full); progress —
+        prefilled chunks and their blocks — is kept."""
+        req.state = RequestState.WAITING
+        self.batcher.submit(req)
+        return False
+
+    def _run_prefill(self, req: Request, chunk: int) -> bool:
+        """Execute one planned prefill chunk.  Returns False when the
+        request had to be requeued (no slot / no memory)."""
+        rid = req.rid
+        whole = req.prefilled == 0 and chunk == req.prompt_len
+        chunked = (self._prefill_chunk is not None
+                   and self.batcher.chunk_eligible(req)
+                   and not (whole and self.batcher.prefill_chunk is None))
+        if not chunked:
+            # whole-prompt (ring-aligning) dense prefill path
+            chunk = req.remaining_prefill
+        final = not chunked or req.prefilled + chunk >= req.prompt_len
+        slot = None
+        if final:
             slot = self._free_slot()
             if slot is None:
-                req.state = RequestState.WAITING   # lost its slot; requeue
-                self.batcher.submit(req)
-                continue
-            toks = self.prompts[req.rid][None, :]
+                return self._requeue(req)          # lost its slot
+        if self.paged:
+            need = req.prefilled + chunk if chunked else req.prompt_len
+            if not self._ensure_blocks(req, need):
+                return self._requeue(req)          # pool full; retry later
+        if chunked:
+            start = req.prefilled
+            toks = self.prompts[rid][start:start + chunk]
+            row = jnp.asarray(self._table_row(rid))
+            logits, self.cache = self._prefill_chunk(
+                self.params, {"tokens": jnp.asarray(toks[None, :])},
+                self.cache, row, jnp.int32(start))
+        else:
+            toks = self.prompts[rid][None, :]
             logits, cache_one = self._prefill(
                 self.params, {"tokens": jnp.asarray(toks)})
+            if self.paged:
+                # scatter the dense per-request cache into its blocks
+                row = jnp.asarray(self._table_row(rid))
+                self.cache = self._insert_prefill(self.cache, cache_one,
+                                                  row, slot)
+            else:
+                self._insert_contiguous(slot, cache_one)
+        done = self.batcher.complete_prefill_chunk(req, chunk)
+        if done:
             nxt = int(jnp.argmax(logits[0, -1]))
-            self.outputs[req.rid].append(nxt)
-            self.batcher.complete_prefill([req])
+            self.outputs[rid].append(nxt)
             req.generated += 1
-            self._insert(slot, req, cache_one, nxt, len(toks[0]))
+            if (self.eos is not None and nxt == self.eos) or \
+                    req.generated >= req.max_new_tokens:
+                # single-token request (spawn-to-call shape): finished at
+                # prefill — never takes a decode slot, cannot be preempted
+                # into generating past its budget
+                req.state = RequestState.DONE
+                req.finished_at = time.monotonic()
+                self.batcher.finish_running(req)
+                self._release(rid)
+                return True
+            self._take_slot(slot, req, nxt, req.prompt_len)
+        return True
+
+    def step(self) -> int:
+        """One engine step: evict, admit+prefill (possibly chunked),
+        decode.  Returns the number of active slots stepped."""
+        plan: BatchPlan = self.batcher.plan_step()
+        for req in plan.evicted:
+            self._clear_slot(req)
+            self._release(req.rid)
+        self._pending_prefill = list(plan.prefill)
+        for req in plan.prefill:
+            self._pending_prefill.remove(req)
+            self._run_prefill(req, plan.prefill_chunks.get(
+                req.rid, req.remaining_prefill))
         # decode every occupied slot at its OWN position (attention_decode
         # takes per-sequence positions — continuous batching mixes depths)
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if self.paged:
+            # the next write position may cross into a new block
+            for i in list(active):
+                req = self.slot_req[i]
+                if req is None:
+                    continue          # preempted by an earlier iteration
+                if not self._ensure_blocks(
+                        req, int(self.slot_pos[i]) % self.cap + 1):
+                    self._preempt_running(req)   # pool starved: recompute
+            active = [i for i, r in enumerate(self.slot_req)
+                      if r is not None]
         if active:
             pos_vec = jnp.asarray(self.slot_pos, jnp.int32)
-            logits, self.cache = self._decode(
-                self.params, self.last_token, self.cache, pos_vec)
+            if self.paged:
+                # refresh + re-upload the table only when something moved
+                # (slot churn or block alloc/free); steady-state decode
+                # reuses the cached device array
+                if self._table_dirty or \
+                        self._alloc_seen != self.alloc.version:
+                    for i in active:
+                        self.table[i] = self._table_row(
+                            self.slot_req[i].rid)
+                    self._table_dev = jnp.asarray(self.table)
+                    self._alloc_seen = self.alloc.version
+                    self._table_dirty = False
+                logits, self.cache = self._decode(
+                    self.params, self.last_token, self.cache,
+                    self._table_dev, pos_vec)
+            else:
+                logits, self.cache = self._decode(
+                    self.params, self.last_token, self.cache, pos_vec)
             nxt = jnp.argmax(logits[:, -1], axis=-1)
             for i in active:
                 req = self.slot_req[i]
@@ -147,7 +472,8 @@ class ServingEngine:
                         req.generated >= req.max_new_tokens:
                     req.state = RequestState.DONE
                     req.finished_at = time.monotonic()
-                    self.slot_req[i] = None
+                    self._clear_slot(req)
+                    self._release(req.rid)
         return len(active)
 
     def run_until_drained(self, max_steps: int = 10_000) -> Dict[int, List[int]]:

@@ -1,0 +1,154 @@
+"""Paged KV cache: host-side block allocator + per-request block tables.
+
+The device side is a shared physical pool of fixed-size KV blocks
+(``[num_blocks, block_size, kvH, hd]`` per layer — see
+``models.attention.PagedKVCache``); this module owns the *accounting*: which
+physical blocks belong to which request, what is free, and the padded
+``int32`` table rows the decode/prefill kernels gather through.
+
+Layout invariants the device code relies on:
+
+* logical token slot ``s`` of a request lives in its ``s // block_size``-th
+  block at offset ``s % block_size`` (ring position ``s = pos % capacity``);
+* block **0 is the sink**: it is never allocated, every padded table entry
+  points at it, and decode writes from empty batch slots land there — its
+  contents are garbage by design and always masked out by ``kv_valid``;
+* a physical block belongs to at most one request at a time (the allocator
+  enforces it; :meth:`BlockAllocator.check` asserts it).
+
+Allocation is on-demand (a request holds only the blocks its current length
+needs), which is what makes admission a *memory* decision: the engine admits
+while ``free_tokens`` covers the next chunk and preempts (recompute) under
+pressure instead of reserving worst-case ``s_max`` per slot.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["BlockAllocator", "PoolExhausted", "SINK_BLOCK"]
+
+#: physical block id reserved as the write sink for empty decode slots
+SINK_BLOCK = 0
+
+
+class PoolExhausted(RuntimeError):
+    """Not enough free blocks — caller should preempt or defer admission."""
+
+
+class BlockAllocator:
+    """Free-list allocator over ``num_blocks`` blocks of ``block_size``
+    tokens.  Block :data:`SINK_BLOCK` is reserved and never handed out."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (one is the reserved sink)")
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # LIFO free list: recently freed blocks are reused first (their pool
+        # rows are likelier to still be in cache).
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._tables: Dict[int, List[int]] = {}
+        #: bumped on every table mutation — callers cache derived structures
+        #: (the engine's device-side block table) against it
+        self.version = 0
+
+    # -- capacity ------------------------------------------------------------
+    @property
+    def total_blocks(self) -> int:
+        """Allocatable blocks (the sink is not allocatable)."""
+        return self.num_blocks - 1
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def free_tokens(self) -> int:
+        return len(self._free) * self.block_size
+
+    @property
+    def num_requests(self) -> int:
+        return len(self._tables)
+
+    def blocks_for_tokens(self, tokens: int) -> int:
+        return -(-max(0, tokens) // self.block_size)
+
+    def can_allocate(self, tokens: int, rid: Optional[int] = None) -> bool:
+        """True iff ``ensure(rid, tokens)`` would succeed right now."""
+        have = len(self._tables.get(rid, ())) if rid is not None else 0
+        return self.blocks_for_tokens(tokens) - have <= len(self._free)
+
+    # -- per-request tables ---------------------------------------------------
+    def blocks_of(self, rid: int) -> List[int]:
+        return list(self._tables.get(rid, ()))
+
+    def allocated_tokens(self, rid: int) -> int:
+        return len(self._tables.get(rid, ())) * self.block_size
+
+    def ensure(self, rid: int, tokens: int) -> List[int]:
+        """Grow ``rid``'s table to cover ``tokens`` logical tokens.  Returns
+        the newly allocated block ids (empty when already covered).  Raises
+        :class:`PoolExhausted` without side effects when the pool is short."""
+        table = self._tables.get(rid)
+        if table is None:
+            table = self._tables[rid] = []
+        need = self.blocks_for_tokens(tokens) - len(table)
+        if need <= 0:
+            return []
+        if need > len(self._free):
+            if not table:
+                del self._tables[rid]
+            raise PoolExhausted(
+                f"request {rid} needs {need} blocks, {len(self._free)} free")
+        new = [self._free.pop() for _ in range(need)]
+        table.extend(new)
+        self.version += 1
+        return new
+
+    def free(self, rid: int) -> int:
+        """Release every block of ``rid``.  Returns the number of blocks
+        freed.  Freeing an unknown (or already freed) request raises — a
+        double free is an accounting bug, not a condition to paper over."""
+        table = self._tables.pop(rid, None)
+        if table is None:
+            raise KeyError(f"request {rid} holds no blocks (double free?)")
+        self._free.extend(table)
+        self.version += 1
+        return len(table)
+
+    def release(self, rid: int) -> int:
+        """Like :meth:`free` but tolerant of requests that never allocated
+        (the engine's eviction path sees both)."""
+        if rid not in self._tables:
+            return 0
+        return self.free(rid)
+
+    def table_row(self, rid: int, max_blocks: int) -> np.ndarray:
+        """Padded ``int32`` table row for the gather kernels: ``rid``'s
+        blocks in logical order, sink-padded to ``max_blocks``."""
+        table = self._tables.get(rid, ())
+        if len(table) > max_blocks:
+            raise ValueError(f"request {rid} holds {len(table)} blocks > "
+                             f"table width {max_blocks}")
+        row = np.full(max_blocks, SINK_BLOCK, np.int32)
+        row[:len(table)] = table
+        return row
+
+    # -- invariants ------------------------------------------------------------
+    def check(self) -> None:
+        """Assert the no-leak / no-double-alloc invariants (property tests
+        call this after every random op)."""
+        held = [b for t in self._tables.values() for b in t]
+        assert SINK_BLOCK not in held, "sink block was allocated"
+        assert SINK_BLOCK not in self._free, "sink block on the free list"
+        seen = set(held)
+        assert len(seen) == len(held), "block owned by two requests"
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate free-list entry"
+        assert not (seen & free), "block both free and allocated"
+        assert len(held) + len(self._free) == self.total_blocks, \
+            f"leak: {self.total_blocks - len(held) - len(self._free)} blocks"

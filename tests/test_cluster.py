@@ -332,3 +332,57 @@ def test_telemetry_dedupes_finishes():
     tel.record_finish(req, 1.0, 0)
     tel.record_finish(req, 2.0, 0)
     assert tel.finished == 1
+
+
+def test_telemetry_dedupes_chunk_migrations_by_rid():
+    """With chunked prefill the same request can be stolen again between
+    chunks; ``requests_migrated`` counts it once, ``chunk_migrations``
+    keeps the raw migration count."""
+    tel = ClusterTelemetry(3)
+    tel.record_steal(0, 1, 2, 100, rids=[7, 8])
+    tel.record_steal(1, 2, 2, 60, rids=[7, 9])    # 7 migrates again
+    assert tel.requests_migrated == 3              # {7, 8, 9}
+    assert tel.chunk_migrations == 4
+    assert tel.steal_events == 2
+    # per-replica traffic stats stay raw
+    assert tel.replicas[1].requests_migrated_out == 2
+
+
+def test_sim_chunked_prefill_dedupes_steal_accounting():
+    """End-to-end: chunked-prefill sim under heavy-tail prompts — a
+    migrated request is counted once however many of its chunks moved, and
+    every request still finishes."""
+    classes = (
+        ClassSpec(priority=0.0, share=0.4, mean_prompt_len=32,
+                  mean_new_tokens=8),
+        ClassSpec(priority=1.0, share=0.6, mean_prompt_len=2048,
+                  mean_new_tokens=16, prompt_dist="pareto"),
+    )
+    tel = run_cluster_sim(6, 800, StealPolicy(amount="half_work"),
+                          classes=classes, utilization=0.9,
+                          prefill_chunk=128, seed=3)
+    s = tel.summary()
+    assert s["finished"] == 800
+    assert s["steal_events"] > 0
+    assert s["chunk_migrations"] >= s["requests_migrated"]
+    # dedup: unique migrated requests can never exceed the population
+    assert s["requests_migrated"] <= 800
+
+
+def test_sim_chunked_prefill_interleaves_urgent_arrivals():
+    """A huge prompt mid-prefill must not block an urgent short request for
+    the whole prefill: with chunking, the urgent request's latency is
+    bounded by one chunk, not by the full prompt."""
+    def interactive_p99(prefill_chunk):
+        classes = (
+            ClassSpec(priority=0.0, share=0.5, mean_prompt_len=32,
+                      mean_new_tokens=4),
+            ClassSpec(priority=1.0, share=0.5, mean_prompt_len=8192,
+                      mean_new_tokens=8, prompt_dist="pareto"),
+        )
+        tel = run_cluster_sim(2, 400, StealPolicy(amount="none"),
+                              classes=classes, utilization=0.85, slots=2,
+                              prefill_chunk=prefill_chunk, seed=5)
+        return tel.class_percentiles(0.0)["p99_s"]
+
+    assert interactive_p99(256) < interactive_p99(None)

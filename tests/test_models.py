@@ -95,6 +95,61 @@ def test_decode_consistency_with_forward(name, use_flash):
     assert err < 0.25, float(err)   # bf16 path tolerance
 
 
+@pytest.mark.parametrize(
+    "name", [pytest.param(n, marks=pytest.mark.slow) if n in _SLOW_DECODE
+             else n for n in list_configs()])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_paged_decode_matches_contiguous(name, dtype):
+    """Decode through per-request block tables must reproduce the dense
+    contiguous-cache decode — bit-identical in fp32 (same gathered view
+    widths, masks and values), tolerance-gated in bf16 — for every family
+    with a paged path.  Families without one (SSM, enc-dec) are skipped
+    (they serve through the contiguous engine)."""
+    from repro.serving.paged_kv import BlockAllocator
+    if dtype == "float32" and name not in ("qwen2-1.5b", "mixtral-8x22b",
+                                           "jamba-v0.1-52b"):
+        pytest.skip("fp32 bit-identity spot-checked one config per family")
+    cfg = scale_down(get_config(name)).replace(ssm_chunk=4, dtype=dtype,
+                                               param_dtype=dtype)
+    m = build_model(cfg)
+    if not m.supports_paged:
+        pytest.skip(f"{cfg.family} has no paged decode path")
+    params = m.init(KEY)
+    n, bs = 12, 8
+    cap = 32 if cfg.sliding_window is None else min(32, cfg.sliding_window)
+    assert cap % bs == 0
+    toks = jax.random.randint(jax.random.PRNGKey(7), (1, n), 0,
+                              cfg.vocab_size)
+    logits0, dense = m.prefill(params, {"tokens": toks}, cap)
+    tok = jnp.argmax(logits0[:, -1:], -1).astype(jnp.int32)
+
+    nblk = cap // bs
+    alloc = BlockAllocator(num_blocks=nblk + 2, block_size=bs)
+    alloc.ensure(0, n)
+    pool = m.init_paged_cache(1, nblk + 2, bs)
+    row = jnp.asarray(alloc.table_row(0, nblk))
+    pool = m.insert_prefill_paged(pool, dense, row, 0)
+
+    t_c = t_p = tok
+    pos = n
+    for _ in range(4):
+        ref, dense = m.decode_step(params, t_c, dense, jnp.int32(pos))
+        alloc.ensure(0, pos % cap + 1)
+        row = jnp.asarray(alloc.table_row(0, nblk))
+        got, pool = m.decode_step_paged(params, t_p, pool, row[None],
+                                        jnp.int32(pos))
+        if dtype == "float32":
+            assert jnp.array_equal(ref, got), \
+                float(jnp.max(jnp.abs(ref - got)))
+        else:
+            err = jnp.max(jnp.abs(ref.astype(jnp.float32)
+                                  - got.astype(jnp.float32)))
+            assert err < 0.25, float(err)
+        t_c = jnp.argmax(ref[:, -1:], -1).astype(jnp.int32)
+        t_p = jnp.argmax(got[:, -1:], -1).astype(jnp.int32)
+        pos += 1
+
+
 def test_sliding_window_attention_masks_far_tokens():
     from repro.models.attention import causal_mask
     m = causal_mask(10, window=3)

@@ -1,0 +1,175 @@
+"""Paged KV cache: allocator invariants (property tests) + fragmented
+block-table decode against the dense reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs import get_config, scale_down
+from repro.models import build_model
+from repro.serving.paged_kv import SINK_BLOCK, BlockAllocator, PoolExhausted
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------- allocator
+def test_allocator_basics():
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    assert a.total_blocks == 7 and a.free_tokens == 28
+    new = a.ensure(1, 10)                 # ceil(10/4) = 3 blocks
+    assert len(new) == 3 and SINK_BLOCK not in new
+    assert a.allocated_tokens(1) == 12
+    assert a.ensure(1, 12) == []          # already covered
+    row = a.table_row(1, 7)
+    assert list(row[:3]) == a.blocks_of(1)
+    assert all(b == SINK_BLOCK for b in row[3:])
+    a.check()
+    assert a.free(1) == 3
+    assert a.free_tokens == 28
+    a.check()
+
+
+def test_allocator_double_free_raises():
+    a = BlockAllocator(num_blocks=4, block_size=2)
+    a.ensure(7, 3)
+    a.free(7)
+    with pytest.raises(KeyError):
+        a.free(7)
+    assert a.release(7) == 0              # engine path: tolerant
+    a.check()
+
+
+def test_allocator_exhaustion_has_no_side_effects():
+    a = BlockAllocator(num_blocks=4, block_size=2)   # 3 allocatable
+    a.ensure(1, 4)                        # 2 blocks
+    with pytest.raises(PoolExhausted):
+        a.ensure(2, 6)                    # needs 3, only 1 free
+    a.check()
+    assert a.num_requests == 1            # rid 2 left no residue
+    assert a.ensure(2, 2) and a.num_free == 0
+    a.check()
+
+
+@settings(max_examples=30)
+@given(st.lists(st.integers(min_value=0, max_value=2 ** 20),
+                min_size=1, max_size=80))
+def test_allocator_never_leaks_under_random_ops(ops):
+    """Random admit/extend/evict/migrate sequences across two pools (the
+    cross-replica steal shape) preserve the no-leak / no-double-alloc
+    invariants after every operation."""
+    pools = [BlockAllocator(num_blocks=12, block_size=4),
+             BlockAllocator(num_blocks=9, block_size=4)]
+    live = [[], []]                        # rids per pool
+    next_rid = 0
+    for v in ops:
+        which = (v >> 2) % 2
+        a, mine = pools[which], live[which]
+        op = v % 4
+        try:
+            if op == 0:                    # admit
+                a.ensure(next_rid, (v >> 4) % 40 + 1)
+                mine.append(next_rid)
+                next_rid += 1
+            elif op == 1 and mine:         # extend
+                rid = mine[(v >> 4) % len(mine)]
+                a.ensure(rid, a.allocated_tokens(rid) + (v >> 4) % 16 + 1)
+            elif op == 2 and mine:         # evict
+                rid = mine.pop((v >> 4) % len(mine))
+                a.free(rid)
+            elif op == 3 and mine:         # migrate to the other pool
+                rid = mine[(v >> 4) % len(mine)]
+                tokens = a.allocated_tokens(rid)
+                other = pools[1 - which]
+                other.ensure(rid, tokens)  # thief allocates first...
+                a.free(rid)                # ...then the victim releases
+                mine.remove(rid)
+                live[1 - which].append(rid)
+        except PoolExhausted:
+            pass                           # admission control, not a bug
+        for p in pools:
+            p.check()
+    for p, mine in zip(pools, live):
+        for rid in list(mine):
+            p.free(rid)
+        p.check()
+        assert p.num_free == p.total_blocks
+
+
+# ------------------------------------- fragmented-table decode vs dense
+@pytest.mark.parametrize("use_flash", [False, True],
+                         ids=["xla", "flash-decode"])
+def test_fragmented_block_table_decode_matches_dense(use_flash):
+    """Two requests whose blocks interleave in the pool (worst-case
+    fragmentation), decoding at different depths in one batch: the paged
+    gather must reproduce the dense contiguous decode bit-for-bit (fp32)."""
+    cfg = scale_down(get_config("qwen2-1.5b")).replace(
+        dtype="float32", param_dtype="float32", use_flash=use_flash)
+    m = build_model(cfg)
+    params = m.init(KEY)
+    bs, cap = 8, 32
+    nblk = cap // bs
+    lens = [17, 9]                         # mixed depths
+    toks = [jax.random.randint(jax.random.PRNGKey(i), (1, n), 0,
+                               cfg.vocab_size) for i, n in enumerate(lens)]
+
+    # interleaved allocation -> fragmented, non-contiguous block tables
+    alloc = BlockAllocator(num_blocks=2 * nblk + 1, block_size=bs)
+    for tokens in range(bs, cap + 1, bs):
+        for rid in (0, 1):
+            if tokens <= ((lens[rid] + bs - 1) // bs) * bs:
+                alloc.ensure(rid, min(tokens, lens[rid]))
+    tables = [alloc.blocks_of(r) for r in (0, 1)]
+    assert tables[0] != sorted(tables[0]) or \
+        any(abs(a - b) > 1 for a, b in zip(tables[0], tables[0][1:])), \
+        f"expected fragmentation, got {tables}"
+
+    pool = m.init_paged_cache(2, 2 * nblk + 1, bs)
+    denses = []
+    for rid, t in enumerate(toks):
+        _, dense = m.prefill(params, {"tokens": t}, cap)
+        denses.append(dense)
+        row = jnp.asarray(alloc.table_row(rid, nblk))
+        pool = m.insert_prefill_paged(pool, dense, row, rid)
+
+    batch_cache = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=1),
+                               denses[0], denses[1])
+    tok = jnp.asarray([[3], [5]], jnp.int32)
+    pos = jnp.asarray(lens, jnp.int32)
+    ref, _ = m.decode_step(params, tok, batch_cache, pos)
+    table = jnp.asarray(np.stack([alloc.table_row(r, nblk)
+                                  for r in (0, 1)]))
+    got, _ = m.decode_step_paged(params, tok, pool, table, pos)
+    assert jnp.array_equal(ref, got), \
+        float(jnp.max(jnp.abs(ref - got)))
+
+
+def test_chunked_prefill_paged_matches_dense_prefill():
+    """Chunked prefill through the block table reproduces the dense
+    whole-prompt prefill (numerics-gated: reduction widths differ)."""
+    cfg = scale_down(get_config("qwen2-1.5b")).replace(
+        dtype="float32", param_dtype="float32")
+    m = build_model(cfg)
+    params = m.init(KEY)
+    n, cap, bs, chunk = 22, 32, 8, 8
+    toks = jax.random.randint(jax.random.PRNGKey(7), (1, n), 0,
+                              cfg.vocab_size)
+    lg_dense, _ = m.prefill(params, {"tokens": toks}, cap)
+    alloc = BlockAllocator(num_blocks=cap // bs + 1, block_size=bs)
+    pool = m.init_paged_cache(1, cap // bs + 1, bs)
+    start = 0
+    while start < n:
+        c = min(chunk, n - start)
+        alloc.ensure(0, start + c)
+        row = jnp.asarray(alloc.table_row(0, cap // bs))
+        lg, pool = m.prefill_chunk_paged(
+            params, {"tokens": toks[:, start:start + c]}, pool, row,
+            jnp.int32(start))
+        start += c
+    err = float(jnp.max(jnp.abs(lg_dense - lg)))
+    assert err < 1e-4, err

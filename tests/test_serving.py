@@ -109,3 +109,201 @@ def test_engine_cancellation_is_dead_task():
     assert a.state.name == "DONE"
     assert b.state.name == "CANCELLED"
     assert eng.batcher.metrics["evicted_dead"] >= 1
+    if eng.paged:
+        eng.alloc.check()                 # cancelled request freed its blocks
+        assert eng.alloc.num_requests == 0
+
+
+# ------------------------------------------------------------- paged KV
+def _model(name="qwen2-1.5b", **repl):
+    cfg = scale_down(get_config(name)).replace(**repl)
+    model = build_model(cfg)
+    return cfg, model, model.init(KEY)
+
+
+def _drain(model, params, prompts, max_new=4, **kw):
+    eng = ServingEngine(model, params, **kw)
+    reqs = [eng.submit(p, max_new_tokens=max_new, priority=float(i % 2))
+            for i, p in enumerate(prompts)]
+    outs = eng.run_until_drained()
+    assert all(r.state.name == "DONE" for r in reqs)
+    if eng.paged:
+        eng.alloc.check()
+        assert eng.alloc.num_requests == 0, "drained engine leaked blocks"
+    return [outs[r.rid] for r in reqs], eng
+
+
+def test_paged_engine_matches_contiguous_engine():
+    """The paged engine must generate exactly what the contiguous engine
+    generates — same gathered widths, masks and values."""
+    cfg, model, params = _model()
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, n)
+               for n in (25, 6, 17, 3, 30, 9)]
+    ref, _ = _drain(model, params, prompts, max_batch=2, s_max=48,
+                    kv_mode="contiguous")
+    got, eng = _drain(model, params, prompts, max_batch=2, s_max=48,
+                      kv_mode="paged")
+    assert got == ref
+    assert eng.paged and eng.kv_mode == "paged"
+
+
+def test_paged_chunked_prefill_matches_and_counts_chunks():
+    cfg, model, params = _model()
+    rng = np.random.default_rng(12)
+    prompts = [rng.integers(0, cfg.vocab_size, n) for n in (25, 30, 6)]
+    ref, _ = _drain(model, params, prompts, max_batch=2, s_max=48,
+                    kv_mode="contiguous")
+    got, eng = _drain(model, params, prompts, max_batch=2, s_max=48,
+                      kv_mode="paged", prefill_chunk=8, block_size=8)
+    assert [len(o) for o in got] == [len(o) for o in ref]
+    assert got == ref                      # bf16: bit-identical in practice
+    m = eng.batcher.metrics
+    assert m["prefill_chunks"] > len(prompts)   # long prompts were split
+
+
+def test_paged_engine_matches_contiguous_past_ring_wrap():
+    """Decode past the ring capacity (pos >= cap): the paged slot mapping
+    ``pos % cap`` must wrap exactly like the dense ring buffer."""
+    cfg, model, params = _model()
+    rng = np.random.default_rng(16)
+    prompts = [rng.integers(0, cfg.vocab_size, n) for n in (28, 30)]
+    # prompt_len + max_new > cap=32 for every request
+    ref, _ = _drain(model, params, prompts, max_new=8, max_batch=2,
+                    s_max=32, kv_mode="contiguous")
+    got, eng = _drain(model, params, prompts, max_new=8, max_batch=2,
+                      s_max=32, kv_mode="paged", block_size=8)
+    assert got == ref
+    assert all(len(p) + 8 > eng.cap for p in prompts)   # wrap exercised
+
+
+def test_paged_pool_pressure_preempts_and_completes():
+    """A pool far smaller than the worst case forces recompute preemption;
+    every request still finishes with exactly its token budget and the
+    allocator ends clean."""
+    cfg, model, params = _model()
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab_size, n) for n in (40, 38, 36, 35)]
+    got, eng = _drain(model, params, prompts, max_new=6, max_batch=3,
+                      s_max=48, kv_mode="paged", prefill_chunk=8,
+                      block_size=8, num_blocks=9)
+    assert all(len(o) == 6 for o in got)
+    assert eng.batcher.metrics["preempted"] > 0
+
+
+def test_paged_kv_migrates_with_stolen_chunk_request():
+    """A partially-prefilled request stolen from one engine resumes on the
+    thief from the chunk boundary (prefix KV travels) and generates the
+    same tokens as an undisturbed run."""
+    cfg, model, params = _model()
+    rng = np.random.default_rng(14)
+    long_p = rng.integers(0, cfg.vocab_size, 40)
+    kw = dict(s_max=48, kv_mode="paged", prefill_chunk=8, block_size=8)
+    victim = ServingEngine(model, params, max_batch=1, **kw)
+    victim.submit(rng.integers(0, cfg.vocab_size, 4), 2, priority=0.0)
+    req = victim.submit(long_p, 3, priority=1.0)
+    for _ in range(3):
+        victim.step()
+    assert req.prefilled > 0 and req.state.name == "WAITING"
+    (stolen, payload), = victim.export_waiting(target_weight=10_000)
+    assert stolen is req and isinstance(payload, dict) and "kv" in payload
+    victim.alloc.check()
+
+    thief = ServingEngine(model, params, max_batch=2, **kw)
+    thief.submit_request(req, payload)
+    assert req.prefilled > 0               # prefix adopted, not recomputed
+    outs = thief.run_until_drained()
+    thief.alloc.check()
+
+    ref, _ = _drain(model, params, [long_p], max_new=3, max_batch=1, **kw)
+    assert outs[req.rid] == ref[0]
+
+
+def test_preempted_request_migrates_with_emitted_tokens():
+    """Preempt-then-steal: a recompute-preempted request's already-emitted
+    tokens (folded into its prompt) must travel with the migration — the
+    client-visible stream survives intact."""
+    cfg, model, params = _model()
+    rng = np.random.default_rng(21)
+    kw = dict(s_max=48, kv_mode="paged", prefill_chunk=8, block_size=8)
+    victim_eng = ServingEngine(model, params, max_batch=2, num_blocks=9,
+                               **kw)
+    reqs = [victim_eng.submit(rng.integers(0, cfg.vocab_size, 30), 6)
+            for _ in range(2)]
+    for _ in range(6):
+        victim_eng.step()
+    running = [r for r in reqs if r.state.name == "RUNNING"]
+    if running:
+        victim_eng._preempt_running(running[0])    # force a fold
+    stolen = victim_eng.export_waiting(target_weight=10_000)
+    thief = ServingEngine(model, params, max_batch=2, **kw)
+    for r, payload in stolen:
+        thief.submit_request(r, payload)
+    outs = thief.run_until_drained()
+    victim_eng.run_until_drained()
+    for r in reqs:
+        stream = outs.get(r.rid) or victim_eng.outputs.get(r.rid)
+        assert r.state.name == "DONE" and len(stream) == 6, \
+            (r.rid, r.state, stream)
+
+
+def test_kv_import_from_larger_ring_recomputes():
+    """A prefix exported from a victim with a larger ring than the thief's
+    must be rejected (recompute), not crash the thief's block table."""
+    cfg, model, params = _model()
+    rng = np.random.default_rng(22)
+    kw = dict(kv_mode="paged", prefill_chunk=8, block_size=8)
+    victim_eng = ServingEngine(model, params, max_batch=1, s_max=48, **kw)
+    victim_eng.submit(rng.integers(0, cfg.vocab_size, 4), 2, priority=0.0)
+    big = victim_eng.submit(rng.integers(0, cfg.vocab_size, 40), 3,
+                            priority=1.0)
+    for _ in range(4):
+        victim_eng.step()
+    assert big.prefilled > 0 and big.state.name == "WAITING"
+    (r, payload), = victim_eng.export_waiting(target_weight=10_000)
+    thief = ServingEngine(model, params, max_batch=1, s_max=32, **kw)
+    thief.submit_request(r, payload)
+    assert r.prefilled == 0                         # rejected → recompute
+    outs = thief.run_until_drained()
+    assert r.state.name == "DONE" and len(outs[r.rid]) == 3
+    thief.alloc.check()
+
+
+def test_preemption_never_inverts_priority():
+    """Pool pressure from a bulk request must not recompute-preempt a more
+    urgent holder (it defers instead)."""
+    cfg, model, params = _model()
+    rng = np.random.default_rng(23)
+    eng = ServingEngine(model, params, max_batch=2, s_max=48,
+                        kv_mode="paged", prefill_chunk=8, block_size=8,
+                        num_blocks=9)
+    urgent = eng.submit(rng.integers(0, cfg.vocab_size, 30), 6,
+                        priority=0.0)
+    bulk = eng.submit(rng.integers(0, cfg.vocab_size, 40), 6, priority=1.0)
+    eng.run_until_drained()
+    assert urgent.state.name == "DONE" and bulk.state.name == "DONE"
+    # any preemption under pressure must have landed on the bulk request
+    assert urgent.prompt_len == 30          # never folded/preempted
+    assert urgent.finished_at <= bulk.finished_at
+
+
+def test_paged_engine_hybrid_family():
+    """Hybrid (Jamba) pages its attention KV; Mamba states stay slot-dense.
+    Whole-prompt prefill (no chunk path), paged decode."""
+    cfg, model, params = _model("jamba-v0.1-52b", ssm_chunk=4)
+    rng = np.random.default_rng(15)
+    prompts = [rng.integers(0, cfg.vocab_size, n) for n in (9, 14)]
+    ref, _ = _drain(model, params, prompts, max_batch=2, s_max=32,
+                    kv_mode="contiguous")
+    got, eng = _drain(model, params, prompts, max_batch=2, s_max=32,
+                      kv_mode="paged", block_size=8)
+    assert got == ref
+    assert eng.batcher.prefill_chunk is None   # chunking auto-disabled
+
+
+def test_ssm_family_falls_back_to_contiguous():
+    cfg, model, params = _model("rwkv6-3b", ssm_chunk=4)
+    eng = ServingEngine(model, params, max_batch=2, s_max=32)
+    assert eng.kv_mode == "contiguous" and not eng.paged
+    with pytest.raises(ValueError):
+        ServingEngine(model, params, max_batch=2, s_max=32, kv_mode="paged")
