@@ -25,49 +25,86 @@ file (the workflow uses 0.25 for the deterministic simulator/scheduler
 counters and a wider one for interpreter-mode kernel wall times).
 Metrics present in only one file are reported (a vanished metric is a
 silent-regression smell) but only fail with ``--strict-keys``.
+
+Every numeric leaf must have a *declared direction*: gated
+(``HIGHER_BETTER`` / ``LOWER_BETTER`` / ``ABSOLUTE``) or explicitly neutral
+(``NEUTRAL`` — workload parameters and raw event counters that describe the
+run, not its quality).  A key in neither set is a metric born ungated:
+it is always reported, and fails the run under ``--strict-keys`` — add new
+metrics to the right set when you add them to a benchmark.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
-from typing import Dict, Tuple
+from typing import Dict, List, Tuple
 
 HIGHER_BETTER = {
     "ops_per_s", "tasks_per_s", "elements_per_s", "tok_per_s", "speedup",
     "merged_speedup_vs_unmerged", "chunked_speedup_vs_fifo_p99",
+    "prefix_cache_speedup_p99", "cache_hit_rate", "hit_rate",
 }
 LOWER_BETTER = {
     "p50_s", "p90_s", "p99_s", "mean_s", "max_s", "pallas_us", "ref_us",
-    "us_per_call", "interactive_p99_fifo_s", "interactive_p99_strategy_s",
-    "interactive_p99_chunked_s",
+    "us_per_call", "time_s", "interactive_p99_fifo_s",
+    "interactive_p99_strategy_s", "interactive_p99_chunked_s",
+    "interactive_p99_cache_on_s", "interactive_p99_cache_off_s",
 }
 ABSOLUTE = {"max_err"}
+#: run-describing numbers with no quality direction: workload/config
+#: parameters and raw event counters (population counts, migration traffic,
+#: cache token tallies).  Tracked for presence, never ratio-gated.
+NEUTRAL = {
+    # config / workload shape
+    "replicas", "requests", "slots", "utilization", "seed", "n", "ops",
+    "tasks", "spawns", "repeats", "places", "block", "cutoff",
+    "merge_chunks", "prefix_block", "prefix_n", "qsort_cutoff", "qsort_n",
+    "spray_n", "storage_n",
+    # raw event counters
+    "finished", "cancelled", "rejected", "deadline_misses", "steal_events",
+    "requests_migrated", "chunk_migrations", "weight_migrated",
+    "steals_in", "steals_out", "requests_migrated_out",
+    "weight_migrated_out", "count", "tokens", "calls_converted",
+    "one_pass_fraction", "hit_tokens", "miss_tokens",
+    "prefix_hit_tokens", "prefix_miss_tokens",
+}
 #: wall-clock of whole benchmark phases — too machine-dependent to gate
 IGNORED = {"wall_seconds"}
 
 
-def collect(node, path="") -> Dict[str, Tuple[str, float]]:
-    """Flatten to {path: (kind, value)} for every gated numeric leaf."""
+def collect(node, path="") -> Tuple[Dict[str, Tuple[str, float]], List[str]]:
+    """Flatten to {path: (kind, value)} for every gated numeric leaf, plus
+    the paths of numeric leaves whose key has no declared direction."""
     out: Dict[str, Tuple[str, float]] = {}
+    unknown: List[str] = []
     if isinstance(node, dict):
         for k, v in node.items():
             p = f"{path}/{k}"
             if isinstance(v, (dict, list)):
-                out.update(collect(v, p))
+                sub, u = collect(v, p)
+                out.update(sub)
+                unknown.extend(u)
             elif isinstance(v, (int, float)) and not isinstance(v, bool):
                 if k in IGNORED:
                     continue
-                if k in ABSOLUTE:
+                if k in NEUTRAL:
+                    # presence-tracked (a vanished counter is a smell)
+                    out[p] = ("neutral", float(v))
+                elif k in ABSOLUTE:
                     out[p] = ("abs", float(v))
                 elif k in HIGHER_BETTER:
                     out[p] = ("high", float(v))
                 elif k in LOWER_BETTER:
                     out[p] = ("low", float(v))
+                else:
+                    unknown.append(p)
     elif isinstance(node, list):
         for i, v in enumerate(node):
-            out.update(collect(v, f"{path}/{i}"))
-    return out
+            sub, u = collect(v, f"{path}/{i}")
+            out.update(sub)
+            unknown.extend(u)
+    return out, unknown
 
 
 def main(argv=None) -> int:
@@ -77,13 +114,15 @@ def main(argv=None) -> int:
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="allowed fractional regression (0.25 = 25%%)")
     ap.add_argument("--strict-keys", action="store_true",
-                    help="also fail when a baseline metric vanished")
+                    help="also fail when a baseline metric vanished or a "
+                         "numeric leaf has no declared gate direction")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
-        base = collect(json.load(f))
+        base, base_unknown = collect(json.load(f))
     with open(args.fresh) as f:
-        fresh = collect(json.load(f))
+        fresh, fresh_unknown = collect(json.load(f))
+    unknown = sorted(set(base_unknown) | set(fresh_unknown))
 
     failures, notes = [], []
     eps = 1e-12
@@ -91,6 +130,8 @@ def main(argv=None) -> int:
         if path not in fresh:
             notes.append(f"metric vanished: {path}")
             continue
+        if kind == "neutral":
+            continue                    # presence is all that is checked
         _, v = fresh[path]
         if kind == "abs":
             limit = max(4 * b, 1e-3)
@@ -114,14 +155,21 @@ def main(argv=None) -> int:
           f"{args.tolerance * 100:.0f}%)")
     for n in notes:
         print(f"  note: {n}")
+    for p in unknown:
+        print(f"  note: metric with no gate direction (born ungated): {p}")
     if failures:
         print(f"PERF REGRESSION ({len(failures)}):", file=sys.stderr)
         for msg in failures:
             print(f"  {msg}", file=sys.stderr)
         return 1
-    if args.strict_keys and notes:
-        print("FAIL: baseline metrics missing from fresh run",
-              file=sys.stderr)
+    if args.strict_keys and (notes or unknown):
+        if notes:
+            print("FAIL: baseline metrics missing from fresh run",
+                  file=sys.stderr)
+        if unknown:
+            print(f"FAIL: {len(unknown)} numeric leaves have no declared "
+                  "direction — register them in HIGHER_BETTER / "
+                  "LOWER_BETTER / ABSOLUTE or NEUTRAL", file=sys.stderr)
         return 1
     print("OK: no regression beyond tolerance")
     return 0

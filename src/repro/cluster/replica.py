@@ -51,8 +51,19 @@ class Replica:
         the thief condition for the router's steal loop."""
         raise NotImplementedError
 
+    def prefix_match(self, req: Request,
+                     tokens: Optional[Any] = None) -> int:
+        """Prompt-prefix tokens this replica's KV cache already holds for
+        ``req`` — the cache-affinity placement signal.  0 = cold replica
+        (the default for replicas without a prefix cache)."""
+        return 0
+
     # -- request flow --------------------------------------------------------
-    def submit(self, req: Request, tokens: Optional[Any] = None) -> None:
+    def submit(self, req: Request, tokens: Optional[Any] = None,
+               migrated: bool = False) -> None:
+        """``migrated=True`` marks a steal migration: the request was
+        already accepted by the cluster, so a capacity shortfall truncates
+        instead of rejecting."""
         raise NotImplementedError
 
     def steal_waiting(self, target_weight: int) -> List[StolenItem]:
@@ -63,7 +74,7 @@ class Replica:
 
     def receive(self, stolen: List[StolenItem]) -> None:
         for req, tokens in stolen:
-            self.submit(req, tokens)
+            self.submit(req, tokens, migrated=True)
 
     # -- health --------------------------------------------------------------
     def health(self) -> dict:
@@ -104,11 +115,19 @@ class EngineReplica(Replica):
     def wants_work(self) -> bool:
         return self.waiting_count() == 0 and self.free_slots() > 0
 
+    def prefix_match(self, req: Request,
+                     tokens: Optional[Any] = None) -> int:
+        if tokens is None or not getattr(self.engine, "prefix_cache", False):
+            return 0
+        toks = tokens.get("tokens") if isinstance(tokens, dict) else tokens
+        return self.engine.prefix_match(toks)
+
     # -- request flow --------------------------------------------------------
-    def submit(self, req: Request, tokens: Optional[Any] = None) -> None:
+    def submit(self, req: Request, tokens: Optional[Any] = None,
+               migrated: bool = False) -> None:
         if tokens is None:
             raise ValueError("EngineReplica.submit needs prompt tokens")
-        self.engine.submit_request(req, tokens)
+        self.engine.submit_request(req, tokens, migrated=migrated)
 
     def steal_waiting(self, target_weight: int) -> List[StolenItem]:
         return self.engine.export_waiting(target_weight=target_weight)
@@ -122,6 +141,9 @@ class EngineReplica(Replica):
         if getattr(self.engine, "paged", False):
             h["free_kv_tokens"] = self.engine.alloc.free_tokens
             h["kv_requests"] = self.engine.alloc.num_requests
+        if getattr(self.engine, "prefix_cache", False):
+            h["cached_kv_tokens"] = self.engine.alloc.cached_tokens
+            h["cache_hit_rate"] = self.engine.cache_hit_rate()
         return h
 
     # -- engine loop ---------------------------------------------------------

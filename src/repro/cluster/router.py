@@ -5,9 +5,12 @@ strategy shape, lifted from threads-in-a-process to replicas-in-a-cluster:
 
 * **placement** (where an arriving request lands) — round-robin, random,
   least-loaded-of-d sampled replicas ("share on arrival", Van Houdt's
-  sharing discipline), global least-work, or SLO-aware (tier-0 requests get
-  a global scan, bulk tiers the cheap sampled scan); ties broken by
-  ``MachineModel`` distance from the request's home place (locality).
+  sharing discipline), global least-work, SLO-aware (tier-0 requests get
+  a global scan, bulk tiers the cheap sampled scan), or cache-affinity
+  (route to the replica with the longest matching cached prompt prefix —
+  affinity-dependent service times shift the stealing-vs-sharing
+  tradeoff); ties broken by ``MachineModel`` distance from the request's
+  home place (locality).
 * **steal amount** — ``half_work`` (half the victim's backlog by estimated
   *weight*, largest requests first — the paper's steal-half-the-work) vs
   ``half_count`` (half the victim's queue oldest-first, the oblivious
@@ -27,7 +30,8 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence
 
-from ..core.device.request_scheduler import Request, RequestState
+from ..core.device.request_scheduler import (AdmissionRejected, Request,
+                                             RequestState)
 from ..core.machine import MachineModel, flat_machine
 from .replica import Replica
 from .telemetry import ClusterTelemetry
@@ -42,7 +46,8 @@ class StealPolicy:
     amount: str = "half_work"        # half_work | half_count | none
     victim: str = "nearest"          # nearest | random | max_loaded
     placement: str = "round_robin"   # round_robin | random | least_of_d |
-                                     # least_work | slo_aware
+                                     # least_work | slo_aware |
+                                     # cache_affinity
     probe: int = 4                   # replicas probed per steal / placement
     min_victim_weight: int = 2       # don't steal from near-empty victims
 
@@ -52,7 +57,8 @@ class StealPolicy:
         if self.victim not in ("nearest", "random", "max_loaded"):
             raise ValueError(f"unknown victim order {self.victim!r}")
         if self.placement not in ("round_robin", "random", "least_of_d",
-                                  "least_work", "slo_aware"):
+                                  "least_work", "slo_aware",
+                                  "cache_affinity"):
             raise ValueError(f"unknown placement {self.placement!r}")
 
 
@@ -77,6 +83,16 @@ class ClusterRouter:
         self._victims_cache: Dict[int, List[int]] = {}
         self.outstanding: Dict[int, Request] = {}
         self._owner: Dict[int, int] = {}        # rid -> replica index
+        #: rid -> entry point: rids are only unique per entry process, so
+        #: telemetry dedupes by the (origin, rid) pair.  In this one-router
+        #: topology the first-placement replica stands in for the entry
+        #: point (rids here come from one counter and cannot collide); a
+        #: multi-entry deployment must stamp each entry router's own id so
+        #: the pair is globally unique — telemetry treats it as opaque.
+        self._origin: Dict[int, int] = {}
+        #: prefix group -> replica that last served it (the cache-affinity
+        #: placement hint; avoids probing every replica per arrival)
+        self._group_home: Dict[int, int] = {}
         self._steps = 0
 
     # -- placement -----------------------------------------------------------
@@ -92,7 +108,29 @@ class ClusterRouter:
             return (self.replicas[i].backlog_weight(), dist, i)
         return min(candidates, key=key)
 
-    def place(self, req: Request, home: Optional[int] = None) -> int:
+    def _place_affine(self, req: Request, tokens,
+                      home: Optional[int]) -> int:
+        """Cache-affinity placement: among ``probe`` sampled replicas plus
+        the prefix group's last home, route to the longest matching cached
+        prefix; load and distance break ties (a warm replica wins over an
+        idle cold one — the Van Houdt sharing-vs-stealing tradeoff shifts
+        when service time is affinity-dependent)."""
+        cand = self._sampled(self.policy.probe)
+        if req.prefix_group is not None:
+            hint = self._group_home.get(req.prefix_group)
+            if hint is not None and hint not in cand:
+                cand.append(hint)
+
+        def key(i: int):
+            rep = self.replicas[i]
+            dist = (self.machine.distance(home, rep.place)
+                    if home is not None else 0)
+            return (-rep.prefix_match(req, tokens),
+                    rep.backlog_weight(), dist, i)
+        return min(cand, key=key)
+
+    def place(self, req: Request, home: Optional[int] = None,
+              tokens=None) -> int:
         p = self.policy.placement
         n = len(self.replicas)
         if p == "round_robin":
@@ -103,6 +141,8 @@ class ClusterRouter:
             return self._least_loaded(self._sampled(self.policy.probe), home)
         if p == "least_work":
             return self._least_loaded(range(n), home)
+        if p == "cache_affinity":
+            return self._place_affine(req, tokens, home)
         # slo_aware: urgent classes pay for the global scan, bulk ones sample
         if req.priority <= 0.0:
             return self._least_loaded(range(n), home)
@@ -110,11 +150,22 @@ class ClusterRouter:
 
     def submit(self, req: Request, tokens=None,
                home: Optional[int] = None) -> int:
-        """Place ``req`` on a replica; returns the replica index."""
-        idx = self.place(req, home)
-        self.replicas[idx].submit(req, tokens)
+        """Place ``req`` on a replica; returns the replica index, or -1
+        when the replica rejected it at admission (overflow policy) — a
+        per-request outcome, never a cluster failure: the request is
+        cancelled, telemetry counts it, and the loop goes on."""
+        idx = self.place(req, home, tokens)
+        try:
+            self.replicas[idx].submit(req, tokens)
+        except AdmissionRejected:
+            req.cancel()
+            self.telemetry.record_rejected(req, origin=idx)
+            return -1
         self.outstanding[req.rid] = req
         self._owner[req.rid] = idx
+        self._origin[req.rid] = idx
+        if req.prefix_group is not None:
+            self._group_home[req.prefix_group] = idx
         return idx
 
     # -- steal loop ----------------------------------------------------------
@@ -186,16 +237,20 @@ class ClusterRouter:
         if not stolen:
             return 0
         thief = self.replicas[thief_idx]
+        for r, _ in stolen:
+            r.cached_prefix = 0          # cache affinity does not travel
         thief.receive(stolen)
         weight = 0
         for r, _ in stolen:
             weight += r.est_remaining_work
             self._owner[r.rid] = thief_idx
-        # rids let telemetry dedupe: with chunked prefill the same request
-        # can migrate again between chunks
-        self.telemetry.record_steal(victim_idx, thief_idx,
-                                    len(stolen), weight,
-                                    rids=[r.rid for r, _ in stolen])
+        # (origin, rid) keys let telemetry dedupe: with chunked prefill the
+        # same request can migrate again between chunks, and bare rids are
+        # only unique per entry process
+        self.telemetry.record_steal(
+            victim_idx, thief_idx, len(stolen), weight,
+            rids=[(self._origin.get(r.rid, victim_idx), r.rid)
+                  for r, _ in stolen])
         return len(stolen)
 
     def steal_tick(self) -> int:
@@ -233,23 +288,26 @@ class ClusterRouter:
                 self._record_finish(req, self._owner.get(rid))
                 done.append(rid)
             elif req.state == RequestState.CANCELLED:
-                self.telemetry.record_cancelled(req)
+                self.telemetry.record_cancelled(
+                    req, origin=self._origin.get(rid))
                 done.append(rid)
             elif req.state == RequestState.WAITING and \
                     req.deadline is not None and now > req.deadline:
                 # expired while queued: the batcher will prune it and it
                 # will never run — stop tracking it so drains terminate
-                self.telemetry.record_expired(req)
+                self.telemetry.record_expired(
+                    req, origin=self._origin.get(rid))
                 done.append(rid)
         for rid in done:
             del self.outstanding[rid]
             self._owner.pop(rid, None)
+            self._origin.pop(rid, None)
 
     def _record_finish(self, req: Request,
                        replica_id: Optional[int] = None) -> None:
         self.telemetry.record_finish(
             req, req.finished_at if req.finished_at is not None
-            else self.now(), replica_id)
+            else self.now(), replica_id, origin=self._origin.get(req.rid))
 
     def on_finished(self, req: Request,
                     replica_id: Optional[int] = None) -> None:
@@ -257,6 +315,7 @@ class ClusterRouter:
         self._record_finish(req, replica_id)
         self.outstanding.pop(req.rid, None)
         self._owner.pop(req.rid, None)
+        self._origin.pop(req.rid, None)
 
     def run_until_drained(self, max_steps: int = 100_000,
                           steal_every: int = 2) -> None:

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Callable, List, Optional, Sequence, Tuple
 
@@ -57,9 +58,11 @@ class ServiceModel:
     decode_rate: float = 64.0        # generated tokens/s per decode slot
 
     def prefill_time(self, req: Request) -> float:
-        # remaining prefill only: a stolen (or chunked) request keeps its
-        # processed prefix — the KV blocks travel with the block table
-        return req.remaining_prefill / self.prefill_rate
+        # uncached remaining prefill only: a stolen (or chunked) request
+        # keeps its processed prefix (the KV blocks travel with the block
+        # table), and a locally-cached prefix is adopted, not recomputed —
+        # service time is hit-dependent
+        return req.uncached_prefill / self.prefill_rate
 
     def service_time(self, req: Request) -> float:
         return self.prefill_time(req) + \
@@ -79,7 +82,8 @@ class SimReplica(Replica):
                  place: Optional[int] = None,
                  merge_policy: Optional[MergePolicy] = None,
                  prefill_chunk: Optional[int] = None,
-                 admission: str = "strategy"):
+                 admission: str = "strategy",
+                 prefix_cache_tokens: int = 0):
         super().__init__(replica_id, place)
         self.clock = clock
         self.service = service or ServiceModel()
@@ -90,6 +94,13 @@ class SimReplica(Replica):
                                          admission=admission,
                                          place_id=replica_id)
         self.active = 0
+        #: modeled prefix cache: prefix group -> cached prefix tokens, LRU
+        #: over a ``prefix_cache_tokens`` capacity (0 = no cache).  Live
+        #: engines hash real tokens; the simulator models the same hit
+        #: behaviour through the workload's synthetic prefix groups.
+        self.prefix_cache_tokens = prefix_cache_tokens
+        self._pcache: "OrderedDict[int, int]" = OrderedDict()
+        self._pcache_total = 0
         self.sim: Optional["Simulation"] = None   # bound by Simulation
 
     # -- Replica interface ---------------------------------------------------
@@ -108,7 +119,48 @@ class SimReplica(Replica):
     def wants_work(self) -> bool:
         return self.active < self.slots and self.batcher.waiting_count == 0
 
-    def submit(self, req: Request, tokens=None) -> None:
+    def prefix_match(self, req: Request, tokens=None) -> int:
+        if not self.prefix_cache_tokens or req.prefix_group is None:
+            return 0
+        return min(self._pcache.get(req.prefix_group, 0), req.prefix_len)
+
+    def _cache_adopt(self, req: Request) -> None:
+        """Admission-time cache probe: the cached prefix is adopted (jumping
+        ``prefilled`` forward, exactly like the engine's block adoption), so
+        the modeled prefill time covers only the uncached remainder."""
+        if not self.prefix_cache_tokens or req.prefilled > 0:
+            return
+        hit = min(self.prefix_match(req), max(req.prompt_len - 1, 0))
+        req.cached_prefix = hit
+        if hit:
+            req.prefilled = hit
+            self._pcache.move_to_end(req.prefix_group)
+        if self.sim is not None:
+            self.sim.router.telemetry.record_prefix_cache(
+                self.replica_id, hit, req.prompt_len - hit)
+
+    def _cache_insert(self, req: Request) -> None:
+        """The request's shared prefix is now resident: cache it, evicting
+        least-recently-used groups beyond the capacity."""
+        if not self.prefix_cache_tokens or req.prefix_group is None:
+            return
+        plen = min(req.prefix_len, req.prompt_len)
+        old = self._pcache.get(req.prefix_group, 0)
+        if plen > old:
+            self._pcache_total += plen - old
+            self._pcache[req.prefix_group] = plen
+        self._pcache.move_to_end(req.prefix_group)
+        while self._pcache_total > self.prefix_cache_tokens \
+                and len(self._pcache) > 1:
+            _, n = self._pcache.popitem(last=False)
+            self._pcache_total -= n
+
+    def submit(self, req: Request, tokens=None,
+               migrated: bool = False) -> None:
+        # probe before the strategy is built: cache-aware admission priority
+        # and steal weight read ``cached_prefix``
+        if req.prefilled == 0:
+            req.cached_prefix = self.prefix_match(req)
         self.batcher.submit(req)
         if self.sim is not None:
             self.dispatch()
@@ -128,6 +180,7 @@ class SimReplica(Replica):
             req = self.batcher.pop_next_waiting()
             if req is None:
                 break
+            self._cache_adopt(req)
             chunk = self.batcher.chunk_tokens_for(req)
             if chunk < req.remaining_prefill:
                 # the chunk occupies a slot: it IS load — track it in the
@@ -153,12 +206,15 @@ class SimReplica(Replica):
         self.active -= 1
         self.batcher.finish_running(req)
         self.batcher.complete_prefill_chunk(req, chunk)
+        if req.prefilled >= min(req.prefix_len, req.prompt_len):
+            self._cache_insert(req)       # shared prefix fully resident
         self.dispatch()
 
     def _complete(self, req: Request) -> None:
         self.active -= 1
         req.prefilled = req.prompt_len
         req.generated = req.max_new_tokens
+        self._cache_insert(req)
         self.batcher.finish_running(req)
         req.state = RequestState.DONE
         req.finished_at = self.clock.now()
@@ -227,6 +283,11 @@ class ClassSpec:
     pareto_alpha: float = 1.5
     prompt_dist: str = "exponential"  # prompt lens: exponential | pareto
     prompt_pareto_alpha: float = 1.5
+    #: shared-prefix (system-prompt) traffic: arrivals spread over
+    #: ``prefix_groups`` distinct system prompts, each covering
+    #: ``prefix_frac`` of the mean prompt length (0 = every prompt cold)
+    prefix_groups: int = 0
+    prefix_frac: float = 0.0
 
     def mean_service(self, service: ServiceModel) -> float:
         return self.mean_prompt_len / service.prefill_rate + \
@@ -279,10 +340,26 @@ def synthetic_requests(num_requests: int, arrival_rate: float,
     prompts = np.empty(num_requests, np.int64)
     new_toks = np.empty(num_requests, np.int64)
     prios = np.empty(num_requests, np.float64)
+    groups = np.full(num_requests, -1, np.int64)
+    prefix_lens = np.zeros(num_requests, np.int64)
     for ci, spec in enumerate(classes):
         mask = which == ci
         n = int(mask.sum())
         p, t = spec.sample_sizes(rng, n)
+        if spec.prefix_groups > 0 and spec.prefix_frac > 0:
+            # shared-prefix traffic: a constant per-group system prompt
+            # plus a private tail drawn from the class's prompt
+            # distribution (class mean preserved)
+            plen = max(1, int(round(spec.mean_prompt_len
+                                    * spec.prefix_frac)))
+            tail = spec._draw(rng, spec.prompt_dist,
+                              max(spec.mean_prompt_len - plen, 1.0),
+                              spec.prompt_pareto_alpha, n)
+            p = plen + np.maximum(1, tail).astype(np.int64)
+            # group ids are globally unique across classes
+            groups[mask] = ci * 1_000_003 + rng.integers(
+                0, spec.prefix_groups, n)
+            prefix_lens[mask] = plen
         prompts[mask] = p
         new_toks[mask] = t
         prios[mask] = spec.priority
@@ -290,9 +367,12 @@ def synthetic_requests(num_requests: int, arrival_rate: float,
     out = []
     for i in range(num_requests):
         def make(now: float, i=i) -> Request:
+            g = int(groups[i])
             return Request(prompt_len=int(prompts[i]),
                            max_new_tokens=int(new_toks[i]),
-                           priority=float(prios[i]), arrival=now)
+                           priority=float(prios[i]), arrival=now,
+                           prefix_group=g if g >= 0 else None,
+                           prefix_len=int(prefix_lens[i]))
         out.append((float(arrivals[i]), make))
     return out
 
@@ -310,6 +390,7 @@ def run_cluster_sim(num_replicas: int, num_requests: int,
                     merge_policy: Optional[MergePolicy] = None,
                     prefill_chunk: Optional[int] = None,
                     admission: str = "strategy",
+                    prefix_cache_tokens: int = 0,
                     seed: int = 0) -> ClusterTelemetry:
     """Build a simulated cluster, push a synthetic workload through the
     shared router policy code, return the telemetry."""
@@ -320,7 +401,8 @@ def run_cluster_sim(num_replicas: int, num_requests: int,
     replicas = [SimReplica(i, clock, service, slots=slots,
                            merge_policy=merge_policy,
                            prefill_chunk=prefill_chunk,
-                           admission=admission)
+                           admission=admission,
+                           prefix_cache_tokens=prefix_cache_tokens)
                 for i in range(num_replicas)]
     telemetry = ClusterTelemetry(num_replicas)
     router = ClusterRouter(replicas, machine=machine, policy=policy,

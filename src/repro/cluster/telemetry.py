@@ -7,8 +7,13 @@ the finish/migration dedup id sets (a few dozen MB at tens of millions of
 requests).  Steal events record both migrated request *count* and migrated
 *weight* — the distinction the steal-half-work vs steal-half-count
 comparison turns on.  With chunked prefill a request can migrate more than
-once (between chunks), so ``requests_migrated`` is deduped by request id
-(one request = one migrated request, however many of its chunks moved);
+once (between chunks), so ``requests_migrated`` is deduped by migration key
+(one request = one migrated request, however many of its chunks moved) —
+and the key must be an ``(origin, rid)`` pair, not a bare rid: rids are
+only unique per entry process, so two requests entering through different
+replicas can carry the same rid and would alias (undercount) under
+rid-only dedup; the router passes each request's *origin* (its
+first-placement replica) alongside;
 ``chunk_migrations`` keeps the raw per-migration count.  ``summary()`` is
 JSON-serializable and is what ``benchmarks/cluster_scale.py`` writes out.
 """
@@ -72,7 +77,8 @@ class LatencyHistogram:
 
 class _ReplicaStats:
     __slots__ = ("finished", "tokens", "steals_out", "steals_in",
-                 "requests_migrated_out", "weight_migrated_out")
+                 "requests_migrated_out", "weight_migrated_out",
+                 "prefix_hit_tokens", "prefix_miss_tokens")
 
     def __init__(self):
         self.finished = 0
@@ -81,6 +87,8 @@ class _ReplicaStats:
         self.steals_in = 0
         self.requests_migrated_out = 0
         self.weight_migrated_out = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_miss_tokens = 0
 
     def as_dict(self) -> dict:
         return {k: getattr(self, k) for k in self.__slots__}
@@ -95,11 +103,15 @@ class ClusterTelemetry:
         self.replicas: List[_ReplicaStats] = [
             _ReplicaStats() for _ in range(num_replicas)]
         self.steal_events = 0
-        self.requests_migrated = 0      # unique requests (deduped by rid)
+        #: unique requests (deduped by (origin, rid) migration key)
+        self.requests_migrated = 0
         self.chunk_migrations = 0       # raw migrations (>= unique count)
         self.weight_migrated = 0
         self.cancelled = 0
+        self.rejected = 0
         self.deadline_misses = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_miss_tokens = 0
         self._seen: set = set()
         self._migrated: set = set()
 
@@ -112,10 +124,15 @@ class ClusterTelemetry:
         return h
 
     def record_finish(self, req, now: float,
-                      replica_id: Optional[int] = None) -> None:
-        if req.rid in self._seen:
+                      replica_id: Optional[int] = None,
+                      origin: Optional[int] = None) -> None:
+        """``origin`` (the request's entry replica) keys the dedup in
+        multi-entry deployments, where bare rids can alias — same rule as
+        :meth:`record_steal`."""
+        key = (origin, req.rid)
+        if key in self._seen:
             return
-        self._seen.add(req.rid)
+        self._seen.add(key)
         self._hist(self.per_class, req.priority).record(now - req.arrival)
         if req.first_token_at is not None:
             self._hist(self.ttft, req.priority).record(
@@ -127,25 +144,54 @@ class ClusterTelemetry:
         if req.deadline is not None and now > req.deadline:
             self.deadline_misses += 1
 
-    def record_cancelled(self, req) -> None:
-        if req.rid not in self._seen:
-            self._seen.add(req.rid)
+    def record_cancelled(self, req, origin: Optional[int] = None) -> None:
+        key = (origin, req.rid)
+        if key not in self._seen:
+            self._seen.add(key)
             self.cancelled += 1
 
-    def record_expired(self, req) -> None:
+    def record_rejected(self, req, origin: Optional[int] = None) -> None:
+        """Admission-rejected (overflow policy): never placed, never ran."""
+        key = (origin, req.rid)
+        if key not in self._seen:
+            self._seen.add(key)
+            self.rejected += 1
+
+    def record_expired(self, req, origin: Optional[int] = None) -> None:
         """Deadline passed while still queued: never ran, never will."""
-        if req.rid not in self._seen:
-            self._seen.add(req.rid)
+        key = (origin, req.rid)
+        if key not in self._seen:
+            self._seen.add(key)
             self.cancelled += 1
             self.deadline_misses += 1
 
+    def record_prefix_cache(self, replica_id: Optional[int],
+                            hit_tokens: int, miss_tokens: int) -> None:
+        """Prefix-cache outcome of one admission: ``hit_tokens`` of the
+        prompt were adopted from the replica's cache, ``miss_tokens`` had to
+        be prefilled cold."""
+        self.prefix_hit_tokens += hit_tokens
+        self.prefix_miss_tokens += miss_tokens
+        if replica_id is not None:
+            st = self.replicas[replica_id]
+            st.prefix_hit_tokens += hit_tokens
+            st.prefix_miss_tokens += miss_tokens
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        total = self.prefix_hit_tokens + self.prefix_miss_tokens
+        return self.prefix_hit_tokens / total if total else 0.0
+
     def record_steal(self, src: int, dst: int, requests: int,
                      weight: int,
-                     rids: Optional[Sequence[int]] = None) -> None:
+                     rids: Optional[Sequence] = None) -> None:
         """``rids`` enables dedup: with chunked prefill the same request can
         be stolen again between chunks, and counting it once per migration
         would overstate ``requests_migrated`` (per-replica ``*_out`` stats
-        stay raw — they describe traffic, not population)."""
+        stay raw — they describe traffic, not population).  Entries must be
+        globally unique migration keys — ``(origin, rid)`` pairs in
+        multi-entry deployments, where the rid alone is only unique per
+        entry process."""
         if requests <= 0:
             return
         self.steal_events += 1
@@ -179,11 +225,17 @@ class ClusterTelemetry:
         return {
             "finished": self.finished,
             "cancelled": self.cancelled,
+            "rejected": self.rejected,
             "deadline_misses": self.deadline_misses,
             "steal_events": self.steal_events,
             "requests_migrated": self.requests_migrated,
             "chunk_migrations": self.chunk_migrations,
             "weight_migrated": self.weight_migrated,
+            "prefix_cache": {
+                "hit_tokens": self.prefix_hit_tokens,
+                "miss_tokens": self.prefix_miss_tokens,
+                "hit_rate": self.prefix_hit_rate,
+            },
             "per_class": {str(k): self.class_percentiles(k)
                           for k in sorted(self.per_class)},
             "ttft_per_class": {

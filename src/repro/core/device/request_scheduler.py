@@ -40,8 +40,14 @@ from ..task import FinishRegion, Task
 from ..task_storage import StrategyTaskStorage
 
 __all__ = ["Request", "RequestState", "RequestStrategy",
-           "FifoRequestStrategy", "ContinuousBatcher", "BatchPlan",
-           "rebalance_replicas"]
+           "FifoRequestStrategy", "CacheAwareStrategy", "ContinuousBatcher",
+           "BatchPlan", "AdmissionRejected", "rebalance_replicas"]
+
+
+class AdmissionRejected(ValueError):
+    """A replica's admission policy bounced the request (e.g. the KV
+    overflow check).  Routers treat it as a per-request outcome; any other
+    exception from a replica is a real bug and stays loud."""
 
 _rid = itertools.count()
 
@@ -67,6 +73,14 @@ class Request:
     prefilled: int = 0
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
+    #: prompt tokens covered by the local prefix cache (set by the engine /
+    #: sim replica probe; reset to 0 when the request migrates — cache
+    #: affinity does not travel)
+    cached_prefix: int = 0
+    #: synthetic shared-prefix identity for the simulator's workload model
+    #: (None = cold prompt); live engines hash real tokens instead
+    prefix_group: Optional[int] = None
+    prefix_len: int = 0
 
     @property
     def est_remaining_work(self) -> int:
@@ -77,6 +91,20 @@ class Request:
     @property
     def remaining_prefill(self) -> int:
         return max(self.prompt_len - self.prefilled, 0)
+
+    @property
+    def uncached_prefill(self) -> int:
+        """Prompt tokens that still cost prefill compute *here*: the cached
+        prefix is adopted, not recomputed."""
+        return max(self.prompt_len - max(self.prefilled, self.cached_prefix),
+                   0)
+
+    @property
+    def est_uncached_work(self) -> int:
+        """Transitive weight discounted by the local prefix cache — what a
+        cache-aware scheduler should treat as this request's cost."""
+        return self.uncached_prefill + \
+            max(self.max_new_tokens - self.generated, 0)
 
     def cancel(self) -> None:
         if self.state not in (RequestState.DONE,):
@@ -132,6 +160,36 @@ class FifoRequestStrategy(RequestStrategy):
         return (request.arrival, request.rid)
 
 
+class CacheAwareStrategy(RequestStrategy):
+    """SLO priority that also sees the prefix cache: within a class, cheap
+    (mostly-cached) prompts admit first — they free a slot sooner and their
+    hot blocks are adopted before pool pressure evicts them — and the steal
+    weight is the *uncached* remaining work, so a 90%-cached long prompt is
+    not stolen (and recomputed cold on the thief) as if it were heavy.  The
+    order relaxation is safe in the Wimmer et al. sense: arrival still
+    breaks ties, only the cost model changes (``admission="cache_aware"``)."""
+
+    __slots__ = ()
+
+    def __init__(self, request: Request, now: Callable[[], float]):
+        super().__init__(request, now)
+        self.set_transitive_weight(request.est_uncached_work)
+
+    @staticmethod
+    def _key(request: Request):
+        return (request.priority, request.deadline or np.inf,
+                request.uncached_prefill, request.arrival)
+
+    def steal_prioritize(self, other) -> bool:
+        if isinstance(other, CacheAwareStrategy):
+            mine = self.request.est_uncached_work
+            theirs = other.request.est_uncached_work
+            if mine != theirs:
+                return mine > theirs        # heaviest UNCACHED work first
+            return self.request.arrival < other.request.arrival
+        return super().steal_prioritize(other)
+
+
 @dataclass
 class BatchPlan:
     """What the engine should run this step."""
@@ -163,7 +221,7 @@ class ContinuousBatcher:
                  admission: str = "strategy",
                  spawn_to_call_tokens: int = 1,
                  place_id: int = 0):
-        if admission not in ("strategy", "fifo"):
+        if admission not in ("strategy", "fifo", "cache_aware"):
             raise ValueError(f"unknown admission mode {admission!r}")
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
@@ -178,8 +236,14 @@ class ContinuousBatcher:
         # merging nobody needs).
         self.merge_policy = merge_policy or MergePolicy()
         self.now = now
-        self._strategy_cls = (RequestStrategy if admission == "strategy"
-                              else FifoRequestStrategy)
+        self._strategy_cls = {"strategy": RequestStrategy,
+                              "fifo": FifoRequestStrategy,
+                              "cache_aware": CacheAwareStrategy}[admission]
+        # load/steal accounting cost model: cache-aware mode discounts the
+        # locally-cached prefix (it is adopted, not recomputed)
+        self._weight_of = ((lambda r: r.est_uncached_work)
+                           if admission == "cache_aware"
+                           else (lambda r: r.est_remaining_work))
         #: engine hook: False forces whole-prompt prefill for a request
         #: (e.g. prompts longer than the paged ring, which must go through
         #: the ring-aligning dense prefill)
@@ -194,7 +258,9 @@ class ContinuousBatcher:
         self.metrics = {"admitted": 0, "evicted_dead": 0,
                         "merged_prefills": 0, "steps": 0,
                         "deadline_misses": 0, "prefill_chunks": 0,
-                        "calls_converted": 0, "preempted": 0}
+                        "calls_converted": 0, "preempted": 0,
+                        "rejected": 0, "truncated": 0,
+                        "wrapped_oversize": 0}
         # thieves probe load counters far more often than queues mutate, so
         # the O(queue) scans are cached behind a mutation version stamp
         self._version = 0
@@ -228,8 +294,8 @@ class ContinuousBatcher:
                 if st.request.state == RequestState.WAITING \
                         and not st.is_dead():
                     n += 1
-                    w += st.request.est_remaining_work
-            rw = sum(r.est_remaining_work for r in self.running.values())
+                    w += self._weight_of(st.request)
+            rw = sum(self._weight_of(r) for r in self.running.values())
             self._cached = (n, w, rw)
             self._cache_version = self._version
         return self._cached

@@ -33,17 +33,30 @@ from ..serving import ServingEngine
 
 
 def _make_prompts(args, cfg):
+    """Mixed traffic: half the prompts share a 16-token system prefix (the
+    shared-prefix caching shape), half are cold."""
     rng = np.random.default_rng(args.seed)
-    return [rng.integers(0, cfg.vocab_size, int(rng.integers(4, 48)))
-            for _ in range(args.requests)]
+    sys_prefix = rng.integers(0, cfg.vocab_size, 16)
+    out = []
+    for i in range(args.requests):
+        tail = rng.integers(0, cfg.vocab_size, int(rng.integers(4, 32)))
+        out.append(np.concatenate([sys_prefix, tail]) if i % 2 == 0
+                   else tail)
+    return out
 
 
 def _engine_kw(args):
+    admission = args.admission
+    if args.prefix_cache and args.cache_policy == "aware" \
+            and admission == "strategy":
+        admission = "cache_aware"
     return dict(max_batch=args.max_batch, s_max=args.s_max,
                 kv_mode=args.kv, block_size=args.block_size,
                 num_blocks=args.num_blocks,
                 prefill_chunk=args.prefill_chunk,
-                admission=args.admission)
+                admission=admission,
+                prefix_cache=args.prefix_cache,
+                overflow=args.overflow)
 
 
 def _run_engine(eng, prompts, args):
@@ -72,6 +85,13 @@ def _serve_single(args, model, params, cfg) -> None:
         print(f"paged kv: {eng.alloc.total_blocks} blocks x "
               f"{eng.alloc.block_size} tokens, "
               f"{eng.alloc.free_tokens} tokens free at drain")
+    if eng.prefix_cache:
+        s = eng.cache_stats
+        print(f"prefix cache: hit_rate={eng.cache_hit_rate():.2f} "
+              f"({s['hit_tokens']} hit / {s['miss_tokens']} miss tokens), "
+              f"{eng.alloc.cached_tokens} tokens cached at drain, "
+              f"evictions={eng.alloc.cache_evictions} "
+              f"cow_forks={eng.alloc.cow_forks}")
 
 
 def _check_paged_equality(args, model, params, cfg) -> int:
@@ -83,20 +103,37 @@ def _check_paged_equality(args, model, params, cfg) -> int:
     tie flips at chunk boundaries) are reported."""
     prompts = _make_prompts(args, cfg)
     results = {}
+    cache_eng = None
     for mode, over in [
-            ("contiguous", dict(kv_mode="contiguous", prefill_chunk=None)),
-            ("paged", dict(kv_mode="paged", prefill_chunk=None)),
+            ("contiguous", dict(kv_mode="contiguous", prefill_chunk=None,
+                                prefix_cache=False)),
+            ("paged", dict(kv_mode="paged", prefill_chunk=None,
+                           prefix_cache=False)),
             ("paged+chunked", dict(kv_mode="paged",
-                                   prefill_chunk=args.prefill_chunk or 8))]:
+                                   prefill_chunk=args.prefill_chunk or 8,
+                                   prefix_cache=False)),
+            ("paged+cache", dict(kv_mode="paged",
+                                 prefill_chunk=args.prefill_chunk or 8,
+                                 prefix_cache=True))]:
         if mode != "contiguous" and not model.supports_paged:
             print(f"{mode}: family {cfg.family!r} has no paged path — skip")
             continue
         kw = dict(_engine_kw(args), **over)   # --num-blocks etc. flow in
         eng = ServingEngine(model, params, **kw)
+        if mode == "paged+cache" and not eng.prefix_cache:
+            print(f"{mode}: family {cfg.family!r} has no chunk kernel — skip")
+            continue
+        if mode == "paged+cache":
+            # warm pass publishes the shared prefixes; the measured pass
+            # below adopts them (requests admitted together in one plan
+            # cannot hit each other's not-yet-published blocks)
+            _run_engine(eng, prompts, args)
         reqs, outs = _run_engine(eng, prompts, args)
         assert all(r.state.name == "DONE" for r in reqs), mode
         if eng.paged:
             eng.alloc.check()
+        if mode == "paged+cache":
+            cache_eng = eng
         results[mode] = [outs[r.rid] for r in reqs]
         print(f"{mode}: {sum(len(o) for o in results[mode])} tokens")
     if "paged" not in results:
@@ -120,6 +157,21 @@ def _check_paged_equality(args, model, params, cfg) -> int:
         same = chunked == results["contiguous"]
         print(f"OK: chunked prefill token counts match "
               f"(token-exact: {same})")
+    cached = results.get("paged+cache")
+    if cached is not None:
+        if [len(a) for a in cached] != \
+                [len(a) for a in results["contiguous"]]:
+            print("FAIL: prefix cache changed token counts",
+                  file=sys.stderr)
+            return 1
+        if cache_eng.cache_stats["hit_tokens"] == 0:
+            print("FAIL: shared-prefix prompts produced zero cache hits",
+                  file=sys.stderr)
+            return 1
+        same = cached == results["contiguous"]
+        print(f"OK: prefix-cached prefill token counts match "
+              f"(token-exact: {same}, hit_rate="
+              f"{cache_eng.cache_hit_rate():.2f})")
     return 0
 
 
@@ -166,7 +218,7 @@ def main() -> int:
                     choices=["half_work", "half_count", "none"])
     ap.add_argument("--placement", default="round_robin",
                     choices=["round_robin", "random", "least_of_d",
-                             "least_work", "slo_aware"])
+                             "least_work", "slo_aware", "cache_affinity"])
     # Paged KV: the default "auto" pages every family with a paged decode
     # path (dense/MoE/VLM/hybrid) and falls back to the dense per-slot
     # cache elsewhere (SSM, enc-dec).
@@ -178,8 +230,24 @@ def main() -> int:
                     help="chunked prefill: tokens per chunk task "
                          "(paged mode, chunk-capable families)")
     ap.add_argument("--admission", default="strategy",
-                    choices=["strategy", "fifo"],
-                    help="fifo = arrival-ordered admission baseline")
+                    choices=["strategy", "fifo", "cache_aware"],
+                    help="fifo = arrival-ordered admission baseline; "
+                         "cache_aware = priority/steal weight use uncached "
+                         "remaining work")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="prefix caching: refcounted copy-on-write KV "
+                         "block sharing keyed by chained content hashes "
+                         "(paged, chunk-capable families)")
+    ap.add_argument("--cache-policy", default="aware",
+                    choices=["aware", "oblivious"],
+                    help="aware = scheduling sees the cache (cache-aware "
+                         "admission + steal weights); oblivious = cache on "
+                         "but strategies keep the cold cost model")
+    ap.add_argument("--overflow", default="reject",
+                    choices=["reject", "truncate", "allow"],
+                    help="requests whose prompt+budget exceed the KV ring: "
+                         "reject at submit (default), truncate the token "
+                         "budget, or allow the legacy self-corrupting wrap")
     ap.add_argument("--check-paged-equality", action="store_true",
                     help="CI gate: paged and contiguous engines must "
                          "generate identical tokens (exit 1 on mismatch)")

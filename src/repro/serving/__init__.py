@@ -1,4 +1,7 @@
+from ..core.device.request_scheduler import AdmissionRejected
 from .engine import ServingEngine
-from .paged_kv import SINK_BLOCK, BlockAllocator, PoolExhausted
+from .paged_kv import (SINK_BLOCK, BlockAllocator, PoolExhausted,
+                       prefix_block_keys)
 
-__all__ = ["ServingEngine", "BlockAllocator", "PoolExhausted", "SINK_BLOCK"]
+__all__ = ["ServingEngine", "AdmissionRejected", "BlockAllocator",
+           "PoolExhausted", "SINK_BLOCK", "prefix_block_keys"]

@@ -33,11 +33,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.device.request_scheduler import (BatchPlan, ContinuousBatcher,
-                                             Request, RequestState)
+from ..core.device.request_scheduler import (AdmissionRejected, BatchPlan,
+                                             ContinuousBatcher, Request,
+                                             RequestState)
 from ..core.strategy import MergePolicy
 from ..models.model_zoo import Model
-from .paged_kv import BlockAllocator, PoolExhausted, SINK_BLOCK
+from .paged_kv import (BlockAllocator, PoolExhausted, SINK_BLOCK,
+                       prefix_block_keys)
 
 __all__ = ["ServingEngine"]
 
@@ -50,9 +52,13 @@ class ServingEngine:
                  kv_mode: str = "auto", block_size: int = 16,
                  num_blocks: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 admission: str = "strategy"):
+                 admission: str = "strategy",
+                 prefix_cache: bool = False,
+                 overflow: str = "reject"):
         if kv_mode not in ("auto", "paged", "contiguous"):
             raise ValueError(f"unknown kv_mode {kv_mode!r}")
+        if overflow not in ("reject", "truncate", "allow"):
+            raise ValueError(f"unknown overflow policy {overflow!r}")
         if kv_mode == "paged" and not model.supports_paged:
             raise ValueError(
                 f"family {model.cfg.family!r} has no paged decode path")
@@ -87,10 +93,40 @@ class ServingEngine:
         # jit per distinct prompt length (lengths repeat across requests)
         self._prefill = jax.jit(lambda p, b: model.prefill(p, b, s_max))
         self._prefill_chunk = None
+        cfg = model.cfg
+        #: ring capacity of the KV cache (window-clamped); SSM families have
+        #: no KV ring at all
+        self.cap = s_max if cfg.sliding_window is None \
+            else min(s_max, cfg.sliding_window)
+        # A full-attention ring cannot evict: a request whose
+        # prompt + budget exceeds the capacity wraps and corrupts its own
+        # earliest KV (models/attention.py paged-prefill contract requires
+        # start + c <= cap).  Sliding-window rings evict by design, SSM
+        # state is O(1) — neither needs the admission check.
+        self.overflow = overflow
+        self._enforce_fit = (cfg.sliding_window is None
+                             and cfg.family != "ssm"
+                             and overflow != "allow")
+        # Prefix caching shares immutable full prompt blocks between
+        # requests; it needs the chunk kernel to resume behind an adopted
+        # prefix (pure-attention trunks only — the hybrid's Mamba states are
+        # not content-addressable).
+        self.prefix_cache = bool(prefix_cache and kv_mode == "paged"
+                                 and model.prefill_chunk_paged is not None)
+        self._keys: Dict[int, list] = {}     # rid -> chained block keys
+        self.cache_stats = {"hit_tokens": 0, "miss_tokens": 0,
+                            "hit_requests": 0, "lookup_requests": 0}
+        #: rids whose current prefill cycle already hit the stats (a
+        #: requeued-then-retried cold request must not count twice; a
+        #: preemption releases the rid and legitimately re-counts)
+        self._stat_seen: set = set()
+        #: (token_bytes, keys) memo: a cache-affinity router probes several
+        #: replicas with the same prompt and then submits it — hash the
+        #: chain once, not once per probe.  Keyed by content (a memcmp),
+        #: not object identity: a caller reusing a mutated buffer must
+        #: never get the previous prompt's keys.
+        self._hash_memo: Optional[Tuple[bytes, list]] = None
         if self.paged:
-            cfg = model.cfg
-            self.cap = s_max if cfg.sliding_window is None \
-                else min(s_max, cfg.sliding_window)
             if self.cap % block_size:
                 raise ValueError(f"KV capacity {self.cap} not divisible by "
                                  f"block_size {block_size}")
@@ -129,6 +165,62 @@ class ServingEngine:
                             if model.insert_prefill is not None else None)
 
     # -- client API ----------------------------------------------------------
+    def _fit_or_raise(self, prompt_len: int, max_new: int,
+                      can_reject: bool, generated: int = 0) -> int:
+        """Capacity admission check: the prompt plus the *remaining* token
+        budget must fit the KV ring or the earliest prompt blocks get
+        silently overwritten mid-generation (a preempted request's emitted
+        tokens are folded into its prompt, but decode only needs
+        ``max_new - generated`` more positions).  Returns the (possibly
+        truncated) token budget; raises on reject.  Either path bumps a
+        telemetry counter."""
+        if not self._enforce_fit \
+                or prompt_len + max_new - generated <= self.cap:
+            return max_new
+        if self.overflow == "reject" and can_reject:
+            self.batcher.metrics["rejected"] += 1
+            raise AdmissionRejected(
+                f"prompt_len + remaining budget = "
+                f"{prompt_len + max_new - generated} exceeds KV capacity "
+                f"{self.cap}: the ring would wrap and corrupt the prompt's "
+                "own earliest blocks (use overflow='truncate'/'allow' to "
+                "override)")
+        if prompt_len + 1 > self.cap:
+            # not even the prompt fits — truncation cannot save it
+            if can_reject:
+                self.batcher.metrics["rejected"] += 1
+                raise AdmissionRejected(
+                    f"prompt of {prompt_len} tokens exceeds KV capacity "
+                    f"{self.cap}")
+            # migrated: already accepted by the cluster and truncation
+            # cannot save it — serve degraded through the legacy
+            # ring-aligning wrap path rather than drop the request
+            self.batcher.metrics["wrapped_oversize"] += 1
+            return max_new
+        self.batcher.metrics["truncated"] += 1
+        return generated + (self.cap - prompt_len)
+
+    def _adoptable_keys(self, req: Request) -> list:
+        """The prompt's adoptable chain: capped one token short of the
+        prompt — the final token must always be prefilled to produce the
+        first logits."""
+        keys = self._keys.get(req.rid, [])
+        return keys[:(req.prompt_len - 1) // self.block_size]
+
+    def _probe_prefix(self, req: Request, tokens) -> None:
+        """Hash the prompt's full blocks and record how much of it the local
+        prefix cache covers (drives cache-aware admission / steal weight).
+        A request that already holds prefill progress (imported KV) cannot
+        adopt — its cached_prefix must not claim a chain it will never use,
+        or cache-aware pricing undercounts its real remaining work."""
+        if not self.prefix_cache:
+            return
+        self._keys[req.rid] = self._prompt_keys(tokens)
+        if req.prefilled == 0:
+            req.cached_prefix = \
+                self.alloc.match_prefix(self._adoptable_keys(req)) \
+                * self.block_size
+
     def submit(self, tokens: np.ndarray, max_new_tokens: int,
                priority: float = 1.0,
                deadline: Optional[float] = None) -> Request:
@@ -136,20 +228,27 @@ class ServingEngine:
             # a zero-prefill request would be admitted straight into the
             # running set with no slot, logits or last token to decode from
             raise ValueError("empty prompt")
+        max_new_tokens = self._fit_or_raise(len(tokens), max_new_tokens,
+                                            can_reject=True)
         req = Request(prompt_len=len(tokens), max_new_tokens=max_new_tokens,
                       priority=priority, deadline=deadline)
         self.prompts[req.rid] = np.asarray(tokens, np.int32)
         self.outputs[req.rid] = []
+        self._probe_prefix(req, tokens)
         self.batcher.submit(req)
         return req
 
-    def submit_request(self, req: Request, payload: Any = None) -> None:
+    def submit_request(self, req: Request, payload: Any = None,
+                       migrated: bool = False) -> None:
         """Register an externally-created request (cluster router placement
-        or a steal migration from another replica).  ``payload`` is the
-        prompt tokens, or a dict ``{"tokens": ..., "kv": (k, v),
-        "outputs": [...]}`` when a partially-prefilled (or previously
-        preempted) request migrates with its processed KV blocks and the
-        tokens it already emitted."""
+        or, with ``migrated=True``, a steal migration from another
+        replica).  ``payload`` is the prompt tokens, or a dict
+        ``{"tokens": ..., "kv": (k, v), "outputs": [...]}`` when a
+        partially-prefilled (or previously preempted) request migrates with
+        its processed KV blocks and the tokens it already emitted.  A first
+        placement that cannot fit is rejected like a direct ``submit``
+        (per the overflow policy); a migrated request was already accepted
+        by the cluster, so it is truncated rather than bounced."""
         kv = None
         outputs: List[int] = []
         if isinstance(payload, dict):
@@ -160,6 +259,9 @@ class ServingEngine:
             tokens = payload
         if tokens is None or len(tokens) == 0:
             raise ValueError("empty prompt")
+        req.max_new_tokens = self._fit_or_raise(
+            len(tokens), req.max_new_tokens, can_reject=not migrated,
+            generated=req.generated)
         self.prompts[req.rid] = np.asarray(tokens, np.int32)
         self.outputs[req.rid] = outputs or self.outputs.get(req.rid, [])
         if req.prefilled > 0:
@@ -167,6 +269,9 @@ class ServingEngine:
                 pass                        # prefix KV adopted into our pool
             else:
                 req.prefilled = 0           # recompute the prefix
+        # cache affinity does not travel: re-probe against OUR pool
+        req.cached_prefix = 0
+        self._probe_prefix(req, tokens)
         self.batcher.submit(req)
 
     def export_waiting(self, target_weight: Optional[int] = None,
@@ -182,10 +287,18 @@ class ServingEngine:
         out = []
         for r in stolen:
             payload: Dict[str, Any] = {"tokens": self.prompts.pop(r.rid)}
+            self._keys.pop(r.rid, None)
             if self.paged and r.prefilled > 0:
                 kv = self._export_kv(r)
                 if kv is not None:
                     payload["kv"] = kv
+                else:
+                    # the processed prefix cannot travel (hybrid pools: the
+                    # Mamba state is not exportable; attention pools: blocks
+                    # already reclaimed) — the thief restarts from chunk 0,
+                    # and the on-the-wire work estimate must say so
+                    r.prefilled = 0
+            r.cached_prefix = 0              # affinity does not travel
             emitted = self.outputs.pop(r.rid, None)
             if emitted:
                 # a previously-preempted request already emitted tokens
@@ -201,6 +314,37 @@ class ServingEngine:
     def _release(self, rid: int) -> None:
         if self.paged:
             self.alloc.release(rid)
+        self._stat_seen.discard(rid)
+        # block keys die with the blocks: finish/evict/preempt all come
+        # through here, and the one resubmit path (_preempt_running)
+        # re-probes immediately after — a long-running engine must not
+        # accumulate one key list per request ever served
+        self._keys.pop(rid, None)
+
+    def _prompt_keys(self, tokens) -> list:
+        """Chained block keys of ``tokens``, memoized on token content
+        (the same prompt is probed per replica and then submitted; the
+        memcmp hit is far cheaper than re-running the hash chain)."""
+        raw = np.ascontiguousarray(np.asarray(tokens, np.int32)).tobytes()
+        memo = self._hash_memo
+        if memo is not None and memo[0] == raw:
+            return memo[1]
+        keys = prefix_block_keys(tokens, self.block_size)
+        self._hash_memo = (raw, keys)
+        return keys
+
+    def prefix_match(self, tokens) -> int:
+        """Tokens of ``tokens``'s prefix this replica's cache already holds
+        (cluster routers probe this for cache-affinity placement)."""
+        if not self.prefix_cache:
+            return 0
+        return self.alloc.match_prefix(self._prompt_keys(tokens)) \
+            * self.block_size
+
+    def cache_hit_rate(self) -> float:
+        s = self.cache_stats
+        total = s["hit_tokens"] + s["miss_tokens"]
+        return s["hit_tokens"] / total if total else 0.0
 
     def _on_pruned(self, req: Request) -> None:
         """Batcher pruned a dead waiting request: free its blocks."""
@@ -278,6 +422,8 @@ class ServingEngine:
             victim = max(holders, key=self._urgency)   # least urgent first
             if self.batcher.preempt_waiting(victim):
                 self._release(victim.rid)
+                # keys died with the blocks; the victim lives on
+                self._probe_prefix(victim, self.prompts[victim.rid])
                 return True
         # chunk-holders planned later in THIS step: not in the storage yet,
         # so reclaim directly — their upcoming _run_prefill simply restarts
@@ -289,6 +435,7 @@ class ServingEngine:
             victim = max(planned, key=self._urgency)
             victim.prefilled = 0
             self._release(victim.rid)
+            self._probe_prefix(victim, self.prompts[victim.rid])
             self.batcher.metrics["preempted"] += 1
             return True
         actives = [r for r in self.slot_req
@@ -310,7 +457,33 @@ class ServingEngine:
                 [self.prompts[req.rid], np.asarray(out, np.int32)])
             req.prompt_len = len(self.prompts[req.rid])
         self._release(req.rid)
+        # the folded prompt has new block keys — and if this request's own
+        # prefix was published, its re-prefill will adopt it right back
+        self._probe_prefix(req, self.prompts[req.rid])
         self.batcher.preempt(req)
+
+    def _cow_for_write(self, req: Request, slot: int) -> bool:
+        """Decode is about to write at ``slot``'s ring position.  When that
+        lands in a block shared with another table (ring wrap back into an
+        adopted prefix — sliding-window models do this routinely) the block
+        is copy-on-write forked and its pool rows duplicated first; an
+        exclusively-held published block is just unpublished.  False when a
+        fork is needed but the pool is starved even after preemption."""
+        j = (int(self.slot_pos[slot]) % self.cap) // self.block_size
+        while True:
+            try:
+                fork = self.alloc.prepare_write(req.rid, j)
+                break
+            except PoolExhausted:
+                if not self._preempt_for(req):
+                    return False
+        if fork is not None:
+            old, new = fork
+            self.cache = type(self.cache)(
+                self.cache.k.at[:, new].set(self.cache.k[:, old]),
+                self.cache.v.at[:, new].set(self.cache.v[:, old]))
+            self._table_dirty = True
+        return True
 
     # -- engine loop ----------------------------------------------------------
     def _free_slot(self) -> Optional[int]:
@@ -357,10 +530,36 @@ class ServingEngine:
         self.batcher.submit(req)
         return False
 
+    def _adopt_cached_prefix(self, req: Request) -> None:
+        """Start a cold prefill by adopting the longest published chain of
+        the prompt's full blocks (capped one token short of the prompt — the
+        final token must be prefilled to produce the first logits)."""
+        rid = req.rid
+        if not (self.prefix_cache and req.prefilled == 0
+                and self.batcher.chunk_eligible(req)
+                and not self.alloc.blocks_of(rid)):
+            return
+        adopted = self.alloc.adopt_prefix(rid, self._adoptable_keys(req))
+        # actual adoption is the truth — a probe-time estimate whose chain
+        # was evicted in the meantime must not keep under-pricing the
+        # request to the cache-aware strategies
+        req.prefilled = adopted * self.block_size
+        req.cached_prefix = req.prefilled
+        if rid in self._stat_seen:
+            return                 # requeued retry: already counted
+        self._stat_seen.add(rid)
+        if adopted:
+            self.cache_stats["hit_tokens"] += req.prefilled
+            self.cache_stats["hit_requests"] += 1
+        self.cache_stats["lookup_requests"] += 1
+        self.cache_stats["miss_tokens"] += req.prompt_len - req.prefilled
+
     def _run_prefill(self, req: Request, chunk: int) -> bool:
         """Execute one planned prefill chunk.  Returns False when the
         request had to be requeued (no slot / no memory)."""
         rid = req.rid
+        self._adopt_cached_prefix(req)
+        chunk = min(chunk, req.remaining_prefill)
         whole = req.prefilled == 0 and chunk == req.prompt_len
         chunked = (self._prefill_chunk is not None
                    and self.batcher.chunk_eligible(req)
@@ -398,6 +597,12 @@ class ServingEngine:
                 self._insert_contiguous(slot, cache_one)
         done = self.batcher.complete_prefill_chunk(req, chunk)
         if done:
+            if self.prefix_cache and self.batcher.chunk_eligible(req):
+                # every full prompt block is now written: publish the chain
+                # so later prompts sharing the prefix adopt instead of
+                # recompute (ring-wrapping prompts are excluded — their
+                # block content is not the logical prefix)
+                self.alloc.publish_prefix(rid, self._keys.get(rid, []))
             nxt = int(jnp.argmax(logits[0, -1]))
             self.outputs[rid].append(nxt)
             req.generated += 1
@@ -438,6 +643,8 @@ class ServingEngine:
                 if not self._ensure_blocks(
                         req, int(self.slot_pos[i]) % self.cap + 1):
                     self._preempt_running(req)   # pool starved: recompute
+                elif self.prefix_cache and not self._cow_for_write(req, i):
+                    self._preempt_running(req)   # fork needed, pool starved
             active = [i for i, r in enumerate(self.slot_req)
                       if r is not None]
         if active:

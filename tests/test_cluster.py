@@ -7,6 +7,7 @@ from repro.cluster import (ClassSpec, ClusterRouter, ClusterTelemetry,
                            LatencyHistogram, SimClock, SimReplica,
                            Simulation, StealPolicy, run_cluster_sim)
 from repro.core.device import ContinuousBatcher, Request, rebalance_replicas
+from repro.core.device.request_scheduler import AdmissionRejected
 from repro.core.machine import pod_machine
 
 
@@ -339,13 +340,130 @@ def test_telemetry_dedupes_chunk_migrations_by_rid():
     chunks; ``requests_migrated`` counts it once, ``chunk_migrations``
     keeps the raw migration count."""
     tel = ClusterTelemetry(3)
-    tel.record_steal(0, 1, 2, 100, rids=[7, 8])
-    tel.record_steal(1, 2, 2, 60, rids=[7, 9])    # 7 migrates again
-    assert tel.requests_migrated == 3              # {7, 8, 9}
+    tel.record_steal(0, 1, 2, 100, rids=[(0, 7), (0, 8)])
+    tel.record_steal(1, 2, 2, 60, rids=[(0, 7), (0, 9)])  # 7 migrates again
+    assert tel.requests_migrated == 3              # {7, 8, 9} from origin 0
     assert tel.chunk_migrations == 4
     assert tel.steal_events == 2
     # per-replica traffic stats stay raw
     assert tel.replicas[1].requests_migrated_out == 2
+
+
+def test_telemetry_migration_dedupe_keys_by_origin_and_rid():
+    """Regression: rids are only unique per entry process — two requests
+    with equal rids entering through *different* replicas must not alias in
+    the migration dedup (rid-only keys undercounted them as one)."""
+    tel = ClusterTelemetry(3)
+    tel.record_steal(0, 2, 1, 10, rids=[(0, 7)])   # rid 7 from origin 0
+    tel.record_steal(1, 2, 1, 10, rids=[(1, 7)])   # rid 7 from origin 1
+    assert tel.requests_migrated == 2              # distinct requests
+    tel.record_steal(2, 0, 1, 10, rids=[(0, 7)])   # origin-0/7 again
+    assert tel.requests_migrated == 2              # deduped
+
+
+def test_router_passes_origin_rid_migration_keys():
+    """End-to-end: the router stamps each request's entry replica and keys
+    steal telemetry by (origin, rid)."""
+    router, (r0, r1) = _pool(2, amount="half_work", victim="max_loaded",
+                             placement="round_robin")
+    reqs = _reqs([100, 100])
+    for req in reqs:
+        r0.submit(req)
+        router.outstanding[req.rid] = req
+        router._owner[req.rid] = 0
+        router._origin[req.rid] = 0
+    router.steal_for(1)
+    assert router.telemetry.requests_migrated > 0
+    assert all(k in router.telemetry._migrated
+               for k in [(0, r.rid) for r in reqs
+                         if router._owner[r.rid] == 1])
+
+
+def test_router_survives_replica_admission_reject():
+    """An overflow-rejecting engine must cost one request, not the cluster:
+    the router cancels it, counts it, and keeps serving."""
+    router, reps = _pool(2, placement="round_robin")
+
+    def reject(req, tokens=None, migrated=False):
+        raise AdmissionRejected("prompt exceeds KV capacity")
+    reps[0].submit = reject
+    doomed = Request(prompt_len=10, max_new_tokens=10)
+    assert router.submit(doomed) == -1
+    assert doomed.state.name == "CANCELLED"
+    assert router.telemetry.rejected == 1
+    assert doomed.rid not in router.outstanding
+    ok = Request(prompt_len=10, max_new_tokens=10)
+    assert router.submit(ok) == 1          # next placement unaffected
+
+
+# ------------------------------------------------------------ prefix cache
+def test_router_cache_affinity_places_group_on_warm_replica():
+    clock = SimClock()
+    reps = [SimReplica(i, clock, slots=4, prefix_cache_tokens=4096)
+            for i in range(4)]
+    router = ClusterRouter(reps, policy=StealPolicy(
+        amount="none", placement="cache_affinity", probe=2),
+        telemetry=ClusterTelemetry(4), now=clock.now, seed=0)
+    first = Request(prompt_len=256, max_new_tokens=4, prefix_group=9,
+                    prefix_len=200)
+    home = router.submit(first)
+    # warm the home replica's modeled cache
+    reps[home]._cache_insert(first)
+    for _ in range(8):
+        req = Request(prompt_len=256, max_new_tokens=4, prefix_group=9,
+                      prefix_len=200)
+        assert router.submit(req) == home      # longest match wins
+    cold = Request(prompt_len=256, max_new_tokens=4)   # no group: load-based
+    router.submit(cold)
+
+
+def test_sim_replica_adopts_cached_prefix_and_discounts_service():
+    clock = SimClock()
+    rep = SimReplica(0, clock, slots=1, prefix_cache_tokens=4096)
+    warm = Request(prompt_len=100, max_new_tokens=4, prefix_group=3,
+                   prefix_len=80)
+    rep._cache_insert(warm)
+    req = Request(prompt_len=100, max_new_tokens=4, prefix_group=3,
+                  prefix_len=80)
+    assert rep.prefix_match(req) == 80
+    rep._cache_adopt(req)
+    assert req.cached_prefix == 80 and req.prefilled == 80
+    assert req.uncached_prefill == 20
+    # hit-dependent service: only the uncached remainder costs prefill
+    assert rep.service.prefill_time(req) == 20 / rep.service.prefill_rate
+    # LRU capacity evicts oldest groups
+    small = SimReplica(1, clock, slots=1, prefix_cache_tokens=100)
+    for g in range(5):
+        small._cache_insert(Request(prompt_len=60, max_new_tokens=1,
+                                    prefix_group=g, prefix_len=60))
+    assert small._pcache_total <= 100 or len(small._pcache) == 1
+
+
+def test_sim_prefix_cache_beats_cold_on_shared_prefix_traffic():
+    """The acceptance comparison at CI-friendly scale: system-prompt-heavy
+    interactive traffic, cache-affinity placement + cache-aware admission
+    vs the same cluster serving every prompt cold."""
+    classes = (
+        ClassSpec(priority=0.0, share=0.6, mean_prompt_len=2048,
+                  mean_new_tokens=8, prefix_groups=4, prefix_frac=0.9),
+        ClassSpec(priority=1.0, share=0.4, mean_prompt_len=4096,
+                  mean_new_tokens=16, prompt_dist="pareto"),
+    )
+    results = {}
+    for cache in (0, 64 * 1024):
+        tel = run_cluster_sim(
+            4, 2000,
+            StealPolicy(amount="half_work", placement="cache_affinity"),
+            classes=classes, utilization=0.85, prefill_chunk=256,
+            admission="cache_aware" if cache else "strategy",
+            prefix_cache_tokens=cache, seed=11)
+        assert tel.finished == 2000
+        results[cache] = (tel.class_percentiles(0.0)["p99_s"],
+                          tel.prefix_hit_rate)
+    p99_cold, hr_cold = results[0]
+    p99_warm, hr_warm = results[64 * 1024]
+    assert hr_cold == 0.0 and hr_warm > 0.25
+    assert p99_warm < p99_cold             # the cache pays for itself
 
 
 def test_sim_chunked_prefill_dedupes_steal_accounting():

@@ -1,5 +1,6 @@
-"""Paged KV cache: allocator invariants (property tests) + fragmented
-block-table decode against the dense reference."""
+"""Paged KV cache: allocator invariants (property tests, including the
+refcounted copy-on-write prefix cache) + fragmented block-table decode
+against the dense reference + shared-prefix decode bit-exactness."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -13,7 +14,9 @@ except ImportError:
 
 from repro.configs import get_config, scale_down
 from repro.models import build_model
-from repro.serving.paged_kv import SINK_BLOCK, BlockAllocator, PoolExhausted
+from repro.serving import ServingEngine
+from repro.serving.paged_kv import (SINK_BLOCK, BlockAllocator,
+                                    PoolExhausted, prefix_block_keys)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -99,6 +102,201 @@ def test_allocator_never_leaks_under_random_ops(ops):
             p.free(rid)
         p.check()
         assert p.num_free == p.total_blocks
+
+
+# ----------------------------------------------- prefix cache / refcounts
+def test_prefix_keys_are_chained():
+    toks = np.arange(16, dtype=np.int32)
+    a = prefix_block_keys(toks, 4)
+    assert len(a) == 4
+    # same block content at a different prefix position gets a new key
+    b = prefix_block_keys(np.concatenate([toks[4:8], toks[4:8]]), 4)
+    assert a[1] != b[0] and b[0] != b[1]
+    # partial trailing block gets no key
+    assert len(prefix_block_keys(toks[:7], 4)) == 1
+
+
+def test_adopt_publish_share_and_release_to_lru():
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    toks = np.arange(12, dtype=np.int32)
+    keys = prefix_block_keys(toks, 4)
+    a.ensure(1, 12)
+    assert a.match_prefix(keys) == 0
+    assert a.publish_prefix(1, keys) == 3
+    a.check()
+    assert a.match_prefix(keys) == 3
+    # adoption: same physical blocks head the second table
+    assert a.adopt_prefix(2, keys) == 3
+    assert a.blocks_of(2) == a.blocks_of(1)
+    a.check()
+    # the sharer extends privately: the grown block is fresh, not aliased
+    a.ensure(2, 16)
+    assert a.blocks_of(2)[:3] == a.blocks_of(1)
+    assert a.blocks_of(2)[3] not in a.blocks_of(1)
+    # release one holder: blocks stay held (refcount), not cached
+    a.free(1)
+    assert a.num_cached == 0
+    a.check()
+    # release the last holder: published blocks join the cached LRU tail
+    a.free(2)
+    assert a.num_cached == 3 and a.cached_tokens == 12
+    a.check()
+    # still adoptable from the tail
+    assert a.adopt_prefix(3, keys) == 3
+    assert a.num_cached == 0
+    a.free(3)
+    a.check()
+
+
+def test_pool_pressure_evicts_cached_tail_before_exhausting():
+    a = BlockAllocator(num_blocks=8, block_size=4)   # 7 allocatable
+    toks = np.arange(12, dtype=np.int32)
+    keys = prefix_block_keys(toks, 4)
+    a.ensure(1, 12)
+    a.publish_prefix(1, keys)
+    a.free(1)                                        # 3 cached, 4 free
+    assert (a.num_free, a.num_cached) == (4, 3)
+    assert a.can_allocate(7 * 4)                     # cached tail counts
+    a.ensure(2, 24)                                  # 6 blocks: evicts 2
+    assert a.cache_evictions == 2
+    assert a.num_cached == 1
+    a.check()
+    # oldest evicted first: the chain head is gone, so no prefix matches
+    assert a.match_prefix(keys) == 0
+    with pytest.raises(PoolExhausted):
+        a.ensure(3, 12)                              # needs 3, has 1+1
+    a.check()
+    a.free(2)
+    a.check()
+
+
+def test_prepare_write_forks_shared_and_unpublishes_exclusive():
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    toks = np.arange(8, dtype=np.int32)
+    keys = prefix_block_keys(toks, 4)
+    a.ensure(1, 8)
+    a.publish_prefix(1, keys)
+    a.adopt_prefix(2, keys)
+    shared = a.blocks_of(1)
+    # write into a block shared by two tables: COW fork
+    fork = a.prepare_write(2, 0)
+    assert fork is not None
+    old, new = fork
+    assert old == shared[0] and new not in shared
+    assert a.blocks_of(2)[0] == new and a.blocks_of(1) == shared
+    assert a.cow_forks == 1
+    a.check()
+    # writer holds block 1 exclusively? no — still shared with rid 1
+    assert a.prepare_write(2, 1) is not None
+    a.check()
+    a.release(2)
+    # rid 1 now holds its published blocks exclusively: a write just
+    # unpublishes (no copy — nobody else can be reading them)
+    assert a.prepare_write(1, 0) is None
+    assert a.match_prefix(keys) == 0                 # chain head unpublished
+    a.check()
+    a.release(1)
+    a.check()
+
+
+def test_adopt_requires_empty_table():
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    keys = prefix_block_keys(np.arange(8, dtype=np.int32), 4)
+    a.ensure(1, 8)
+    a.publish_prefix(1, keys)
+    a.ensure(2, 4)
+    with pytest.raises(ValueError):
+        a.adopt_prefix(2, keys)
+    a.check()
+
+
+@settings(max_examples=30)
+@given(st.lists(st.integers(min_value=0, max_value=2 ** 24),
+                min_size=1, max_size=120))
+def test_refcounted_allocator_never_leaks_under_random_ops(ops):
+    """Random admit/extend/publish/adopt/fork/free/evict/clear sequences
+    preserve the refcounted no-leak invariant (held ∪ cached ∪ free
+    partitions the pool; refcounts match table membership) after every
+    operation."""
+    a = BlockAllocator(num_blocks=10, block_size=4)
+    # a small universe of shareable prefixes (chained keys, 1-3 blocks)
+    prefixes = [prefix_block_keys(np.arange(n * 4, dtype=np.int32) + s, 4)
+                for s, n in ((0, 1), (100, 2), (200, 3))]
+    live: list = []
+    next_rid = 0
+    for v in ops:
+        op = v % 6
+        try:
+            if op == 0:                    # admit cold
+                rid, next_rid = next_rid, next_rid + 1
+                live.append(rid)           # rid may end up empty: released
+                a.ensure(rid, (v >> 4) % 24 + 1)
+            elif op == 1:                  # admit by adoption
+                keys = prefixes[(v >> 4) % len(prefixes)]
+                rid, next_rid = next_rid, next_rid + 1
+                live.append(rid)           # keeps adopted blocks owned even
+                n = a.adopt_prefix(rid, keys)   # if the extend below fails
+                a.ensure(rid, n * 4 + (v >> 6) % 8 + 1)
+            elif op == 2 and live:         # extend
+                rid = live[(v >> 4) % len(live)]
+                a.ensure(rid, a.allocated_tokens(rid) + (v >> 6) % 8 + 1)
+            elif op == 3 and live:         # publish under a prefix chain
+                rid = live[(v >> 4) % len(live)]
+                a.publish_prefix(rid, prefixes[(v >> 6) % len(prefixes)])
+            elif op == 4 and live:         # COW write somewhere
+                rid = live[(v >> 4) % len(live)]
+                nblk = len(a.blocks_of(rid))
+                if nblk:
+                    a.prepare_write(rid, (v >> 6) % nblk)
+            elif op == 5 and live:         # release (rid may hold nothing
+                rid = live.pop((v >> 4) % len(live))   # if admission failed)
+                a.release(rid)
+        except PoolExhausted:
+            pass                           # admission control, not a bug
+        a.check()
+    for rid in list(live):
+        a.release(rid)                     # tolerant: rid may hold nothing
+        a.check()
+    a.clear_cache()
+    a.check()
+    assert a.num_free == a.total_blocks
+
+
+def test_shared_prefix_decode_bit_exact_vs_private_copies():
+    """Two requests sharing a cached prompt prefix (one physical copy,
+    refcounted) must decode bit-identically (fp32) to the same requests
+    each holding private blocks — and to the contiguous engine."""
+    cfg = scale_down(get_config("qwen2-1.5b")).replace(
+        dtype="float32", param_dtype="float32")
+    m = build_model(cfg)
+    params = m.init(KEY)
+    rng = np.random.default_rng(31)
+    sysp = rng.integers(0, cfg.vocab_size, 16)
+    prompts = [np.concatenate([sysp, rng.integers(0, cfg.vocab_size, n)])
+               for n in (5, 9)]
+    kw = dict(max_batch=2, s_max=64, kv_mode="paged", block_size=8,
+              prefill_chunk=8)
+
+    def run(prefix_cache):
+        eng = ServingEngine(m, params, prefix_cache=prefix_cache, **kw)
+        first = eng.submit(prompts[0], 4)
+        while first.state.name == "WAITING" or first.state.name == "PREFILL":
+            eng.step()                     # publish the prefix before #2
+        second = eng.submit(prompts[1], 4)
+        outs = eng.run_until_drained()
+        assert first.state.name == "DONE" and second.state.name == "DONE"
+        eng.alloc.check()
+        return [outs[first.rid], outs[second.rid]], eng
+
+    private, _ = run(prefix_cache=False)
+    shared, eng = run(prefix_cache=True)
+    assert shared == private
+    assert eng.cache_stats["hit_tokens"] == 16      # two full blocks adopted
+    ref_eng = ServingEngine(m, params, max_batch=2, s_max=64,
+                            kv_mode="contiguous")
+    refs = [ref_eng.submit(p, 4) for p in prompts]
+    ref_outs = ref_eng.run_until_drained()
+    assert shared == [ref_outs[r.rid] for r in refs]
 
 
 # ------------------------------------- fragmented-table decode vs dense

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, scale_down
+from repro.core.device.request_scheduler import Request
 from repro.models import build_model
 from repro.serving import ServingEngine
 
@@ -164,15 +165,18 @@ def test_paged_chunked_prefill_matches_and_counts_chunks():
 
 def test_paged_engine_matches_contiguous_past_ring_wrap():
     """Decode past the ring capacity (pos >= cap): the paged slot mapping
-    ``pos % cap`` must wrap exactly like the dense ring buffer."""
+    ``pos % cap`` must wrap exactly like the dense ring buffer.  Wrapping a
+    full-attention ring is an explicit opt-in now (``overflow="allow"``) —
+    default admission rejects it as self-corrupting."""
     cfg, model, params = _model()
     rng = np.random.default_rng(16)
     prompts = [rng.integers(0, cfg.vocab_size, n) for n in (28, 30)]
     # prompt_len + max_new > cap=32 for every request
     ref, _ = _drain(model, params, prompts, max_new=8, max_batch=2,
-                    s_max=32, kv_mode="contiguous")
+                    s_max=32, kv_mode="contiguous", overflow="allow")
     got, eng = _drain(model, params, prompts, max_new=8, max_batch=2,
-                      s_max=32, kv_mode="paged", block_size=8)
+                      s_max=32, kv_mode="paged", block_size=8,
+                      overflow="allow")
     assert got == ref
     assert all(len(p) + 8 > eng.cap for p in prompts)   # wrap exercised
 
@@ -261,8 +265,12 @@ def test_kv_import_from_larger_ring_recomputes():
         victim_eng.step()
     assert big.prefilled > 0 and big.state.name == "WAITING"
     (r, payload), = victim_eng.export_waiting(target_weight=10_000)
+    # the 40-token prompt exceeds the thief's 32-token ring: a migrated
+    # request is already accepted by the cluster, so even a rejecting
+    # thief serves it degraded (legacy ring-aligning wrap) over dropping it
     thief = ServingEngine(model, params, max_batch=1, s_max=32, **kw)
-    thief.submit_request(r, payload)
+    thief.submit_request(r, payload, migrated=True)
+    assert thief.batcher.metrics["wrapped_oversize"] == 1
     assert r.prefilled == 0                         # rejected → recompute
     outs = thief.run_until_drained()
     assert r.state.name == "DONE" and len(outs[r.rid]) == 3
@@ -299,6 +307,119 @@ def test_paged_engine_hybrid_family():
                       kv_mode="paged", block_size=8)
     assert got == ref
     assert eng.batcher.prefill_chunk is None   # chunking auto-disabled
+
+
+def test_admission_rejects_ring_wrapping_requests():
+    """Regression: the paged chunk-prefill contract requires
+    ``start + c <= cap`` (no ring wrap mid-prompt), but nothing used to
+    validate ``prompt_len + max_new_tokens`` against capacity at admission —
+    a long request silently corrupted its own earliest blocks.  Default
+    policy rejects with a telemetry counter; ``truncate`` clamps the token
+    budget instead."""
+    cfg, model, params = _model()
+    rng = np.random.default_rng(24)
+    eng = ServingEngine(model, params, max_batch=2, s_max=32,
+                        kv_mode="paged", block_size=8)
+    with pytest.raises(ValueError):
+        eng.submit(rng.integers(0, cfg.vocab_size, 30), 8)   # 38 > 32
+    assert eng.batcher.metrics["rejected"] == 1
+    with pytest.raises(ValueError):
+        eng.submit(rng.integers(0, cfg.vocab_size, 40), 1)   # prompt > cap
+    assert eng.batcher.metrics["rejected"] == 2
+    ok = eng.submit(rng.integers(0, cfg.vocab_size, 28), 4)  # 32 == cap
+    eng.run_until_drained()
+    assert ok.state.name == "DONE"
+
+    # first placements through submit_request (cluster routing) reject the
+    # same way; only an actual steal migration downgrades to truncation
+    fresh = Request(prompt_len=30, max_new_tokens=8)
+    with pytest.raises(ValueError):
+        eng.submit_request(fresh, rng.integers(0, cfg.vocab_size, 30))
+    moved = Request(prompt_len=30, max_new_tokens=8)
+    eng.submit_request(moved, rng.integers(0, cfg.vocab_size, 30),
+                       migrated=True)
+    assert moved.max_new_tokens == 2
+    eng.run_until_drained()
+    assert moved.state.name == "DONE"
+
+    # a preempted-then-migrated request has its emitted tokens folded into
+    # the prompt; only the REMAINING budget needs ring space, so a request
+    # that fits exactly must not be over-truncated (silent output loss)
+    folded = Request(prompt_len=30, max_new_tokens=8)
+    folded.generated = 6                   # 30 + (8 - 6) = 32 == cap
+    eng.submit_request(folded, rng.integers(0, cfg.vocab_size, 30),
+                       migrated=True)
+    assert folded.max_new_tokens == 8      # budget untouched
+    eng.run_until_drained()
+    assert folded.state.name == "DONE"
+
+    trunc = ServingEngine(model, params, max_batch=2, s_max=32,
+                          kv_mode="paged", block_size=8, overflow="truncate")
+    req = trunc.submit(rng.integers(0, cfg.vocab_size, 30), 8)
+    assert req.max_new_tokens == 2                   # clamped to capacity
+    assert trunc.batcher.metrics["truncated"] == 1
+    outs = trunc.run_until_drained()
+    assert req.state.name == "DONE" and len(outs[req.rid]) == 2
+
+    # the contiguous engine has the same ring — same check
+    cont = ServingEngine(model, params, max_batch=2, s_max=32,
+                         kv_mode="contiguous")
+    with pytest.raises(ValueError):
+        cont.submit(rng.integers(0, cfg.vocab_size, 30), 8)
+
+
+def test_hybrid_midprefill_steal_restarts_from_chunk0():
+    """A mid-prefill *hybrid* request stolen to another replica cannot
+    resume at the chunk boundary: only attention KV is exportable and the
+    Mamba state is not.  The export path must reset the prefill progress
+    (restart from chunk 0 on the thief) rather than ship bookkeeping that
+    claims a resumable prefix."""
+    cfg, model, params = _model("jamba-v0.1-52b", ssm_chunk=4)
+    rng = np.random.default_rng(25)
+    prompt = rng.integers(0, cfg.vocab_size, 14)
+    kw = dict(s_max=32, kv_mode="paged", block_size=8)
+    victim = ServingEngine(model, params, max_batch=1, **kw)
+    req = victim.submit(prompt, 3)
+    # manufacture a parked mid-prefill state (no hybrid code path parks one
+    # today — this pins the export contract against future chunk paths)
+    victim.alloc.ensure(req.rid, 8)
+    req.prefilled = 8
+    (r, payload), = victim.export_waiting(target_weight=10_000)
+    assert r is req
+    assert r.prefilled == 0                # restart from chunk 0
+    assert not (isinstance(payload, dict) and "kv" in payload)
+    victim.alloc.check()
+
+    thief = ServingEngine(model, params, max_batch=1, **kw)
+    thief.submit_request(r, payload)
+    outs = thief.run_until_drained()
+    ref, _ = _drain(model, params, [prompt], max_new=3, max_batch=1, **kw)
+    assert outs[r.rid] == ref[0]           # full, uncorrupted generation
+
+
+def test_prefix_cache_evicts_cached_tail_before_preempting():
+    """Pool pressure drains unreferenced cached blocks (LRU) before it
+    recompute-preempts anyone: cached-but-idle prefixes are strictly
+    cheaper to reclaim than live work."""
+    cfg, model, params = _model()
+    rng = np.random.default_rng(26)
+    sysp = rng.integers(0, cfg.vocab_size, 16)
+    eng = ServingEngine(model, params, max_batch=2, s_max=48,
+                        kv_mode="paged", block_size=8, prefill_chunk=8,
+                        prefix_cache=True, num_blocks=8)
+    a = eng.submit(np.concatenate([sysp, rng.integers(0, cfg.vocab_size, 6)]),
+                   3)
+    eng.run_until_drained()
+    assert a.state.name == "DONE"
+    assert eng.alloc.num_cached > 0        # prefix survives the request
+    # a big cold request needs more than the free list: the cached tail is
+    # evicted, nobody is preempted
+    b = eng.submit(rng.integers(0, cfg.vocab_size, 40), 4)
+    outs = eng.run_until_drained()
+    assert b.state.name == "DONE" and len(outs[b.rid]) == 4
+    assert eng.alloc.cache_evictions > 0
+    assert eng.batcher.metrics["preempted"] == 0
+    eng.alloc.check()
 
 
 def test_ssm_family_falls_back_to_contiguous():
