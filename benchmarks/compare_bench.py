@@ -44,6 +44,7 @@ HIGHER_BETTER = {
     "ops_per_s", "tasks_per_s", "elements_per_s", "tok_per_s", "speedup",
     "merged_speedup_vs_unmerged", "chunked_speedup_vs_fifo_p99",
     "prefix_cache_speedup_p99", "cache_hit_rate", "hit_rate",
+    "spec_on_tok_per_s", "spec_off_tok_per_s", "spec_decode_speedup",
 }
 LOWER_BETTER = {
     "p50_s", "p90_s", "p99_s", "mean_s", "max_s", "pallas_us", "ref_us",
@@ -68,6 +69,13 @@ NEUTRAL = {
     "weight_migrated_out", "count", "tokens", "calls_converted",
     "one_pass_fraction", "hit_tokens", "miss_tokens",
     "prefix_hit_tokens", "prefix_miss_tokens",
+    # speculative-decoding counters: drafted/accepted volume and the
+    # acceptance rate are workload properties (the draft model and traffic
+    # set them), not quality directions — the gated quality signal is the
+    # spec_*_tok_per_s throughput above
+    "drafted_tokens", "accepted_tokens", "wasted_tokens",
+    "acceptance_rate", "spec_acceptance_rate", "spec_drafted",
+    "spec_accepted", "mean", "min", "max",
 }
 #: wall-clock of whole benchmark phases — too machine-dependent to gate
 IGNORED = {"wall_seconds"}

@@ -22,12 +22,21 @@ hit-dependent prefill service times: prefix cache off vs on
 per-task *hint* the paper's configurable strategies are about, here the
 cached-prefix fraction).
 
+Part 3 is speculative decoding on greedy-friendly traffic (short prompts,
+long generations, draft acceptance ~0.8): spec off vs spec on (k=4)
+through the same simulator with acceptance-dependent decode service times.
+Both runs see the *identical* arrival process (the offered-load formula
+uses the nominal non-speculative service time), so speculation's win is
+measured as completion-latency reduction = decode tokens/s gained.
+
 Headline gates (CI): interactive p99 under ``strategy+chunked`` must beat
 FIFO by >= 1.2x (``--assert-chunked-wins``); prefix cache on must beat
-cache off by >= 1.3x interactive p99 (``--assert-cache-wins``).
+cache off by >= 1.3x interactive p99 (``--assert-cache-wins``);
+speculative decode must deliver >= 1.5x decode tokens/s
+(``--assert-spec-wins``).
 
 Run:  PYTHONPATH=src python benchmarks/serving_bench.py --quick \
-          --assert-chunked-wins --assert-cache-wins \
+          --assert-chunked-wins --assert-cache-wins --assert-spec-wins \
           [--out BENCH_serving.json]
 """
 from __future__ import annotations
@@ -78,6 +87,18 @@ CACHE_VARIANTS = {
                      prefix_cache_tokens=64 * 1024),
 }
 
+#: greedy-friendly decode-dominated traffic: short prompts, long
+#: generations, draft acceptance 0.8 (the regime speculation targets)
+SPEC_WORKLOAD = (
+    ClassSpec(priority=0.0, share=1.0, mean_prompt_len=128,
+              mean_new_tokens=256, spec_accept=0.8),
+)
+
+SPEC_VARIANTS = {
+    "spec_off": dict(spec_k=0),
+    "spec_on": dict(spec_k=4),
+}
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
@@ -97,6 +118,11 @@ def main(argv=None) -> int:
                     help="fail unless prefix cache on beats cache off by "
                          ">= --min-cache-speedup on interactive p99")
     ap.add_argument("--min-cache-speedup", type=float, default=1.3)
+    ap.add_argument("--assert-spec-wins", action="store_true",
+                    help="fail unless speculative decode (k=4, accept 0.8) "
+                         "delivers >= --min-spec-speedup decode tokens/s "
+                         "vs the non-speculative baseline")
+    ap.add_argument("--min-spec-speedup", type=float, default=1.5)
     args = ap.parse_args(argv)
 
     requests = args.requests or (4000 if args.quick else 20_000)
@@ -143,6 +169,23 @@ def main(argv=None) -> int:
               f"inter_p99={inter.get('p99_s', 0):7.3f}s "
               f"hit_rate={s['prefix_cache']['hit_rate']:.3f}", flush=True)
 
+    # -- part 3: speculative decoding on greedy-friendly traffic ------------
+    for name, kw in SPEC_VARIANTS.items():
+        t0 = time.perf_counter()
+        tel = run_cluster_sim(
+            args.replicas, requests, StealPolicy(amount="half_work"),
+            utilization=args.utilization, classes=SPEC_WORKLOAD,
+            slots=args.slots, seed=args.seed, **kw)
+        wall = time.perf_counter() - t0
+        s = tel.summary()
+        s["wall_seconds"] = wall
+        results["runs"][name] = s
+        c = tel.class_percentiles(0.0)
+        print(f"{name:18s} wall={wall:5.1f}s "
+              f"p50={c.get('p50_s', 0):7.3f}s "
+              f"p99={c.get('p99_s', 0):7.3f}s "
+              f"accept={s['spec']['acceptance_rate']:.3f}", flush=True)
+
     p99_fifo = results["runs"]["fifo"]["per_class"]["0.0"]["p99_s"]
     p99_strat = results["runs"]["strategy"]["per_class"]["0.0"]["p99_s"]
     p99_chunk = results["runs"]["strategy+chunked"]["per_class"]["0.0"]["p99_s"]
@@ -151,6 +194,17 @@ def main(argv=None) -> int:
     p99_on = results["runs"]["cache_on"]["per_class"]["0.0"]["p99_s"]
     cache_speedup = p99_off / p99_on if p99_on else float("inf")
     hit_rate = results["runs"]["cache_on"]["prefix_cache"]["hit_rate"]
+    # decode tokens/s under identical arrivals: tokens a request's stream
+    # delivers per second of completion latency (decode-dominated traffic,
+    # so latency reduction IS decode throughput gained)
+    mean_new = SPEC_WORKLOAD[0].mean_new_tokens
+    spec_mean_off = results["runs"]["spec_off"]["per_class"]["0.0"]["mean_s"]
+    spec_mean_on = results["runs"]["spec_on"]["per_class"]["0.0"]["mean_s"]
+    spec_tok_off = mean_new / spec_mean_off if spec_mean_off else 0.0
+    spec_tok_on = mean_new / spec_mean_on if spec_mean_on else 0.0
+    spec_speedup = spec_tok_on / spec_tok_off if spec_tok_off \
+        else float("inf")
+    spec_accept = results["runs"]["spec_on"]["spec"]["acceptance_rate"]
     results["headline"] = {
         "interactive_p99_fifo_s": p99_fifo,
         "interactive_p99_strategy_s": p99_strat,
@@ -162,12 +216,20 @@ def main(argv=None) -> int:
         "prefix_cache_speedup_p99": cache_speedup,
         "cache_hit_rate": hit_rate,
         "cache_beats_cold": bool(cache_speedup >= args.min_cache_speedup),
+        "spec_off_tok_per_s": spec_tok_off,
+        "spec_on_tok_per_s": spec_tok_on,
+        "spec_decode_speedup": spec_speedup,
+        "spec_acceptance_rate": spec_accept,
+        "spec_beats_baseline": bool(spec_speedup >= args.min_spec_speedup),
     }
     print(f"\nheavy-tail prompts: chunked+strategy p99={p99_chunk:.3f}s vs "
           f"FIFO p99={p99_fifo:.3f}s — {speedup:.2f}x")
     print(f"shared-prefix traffic: cache on p99={p99_on:.3f}s vs off "
           f"p99={p99_off:.3f}s — {cache_speedup:.2f}x "
           f"(hit_rate={hit_rate:.3f})")
+    print(f"greedy-friendly traffic: spec on {spec_tok_on:.1f} tok/s vs "
+          f"off {spec_tok_off:.1f} tok/s — {spec_speedup:.2f}x "
+          f"(acceptance={spec_accept:.3f})")
 
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
@@ -188,6 +250,14 @@ def main(argv=None) -> int:
     elif args.assert_cache_wins:
         print(f"OK: prefix cache {cache_speedup:.2f}x >= "
               f"{args.min_cache_speedup:.2f}x cold interactive p99")
+    if args.assert_spec_wins and spec_speedup < args.min_spec_speedup:
+        print(f"FAIL: speculative decode only {spec_speedup:.2f}x "
+              f"baseline tokens/s (need >= {args.min_spec_speedup:.2f}x)",
+              file=sys.stderr)
+        rc = 1
+    elif args.assert_spec_wins:
+        print(f"OK: speculative decode {spec_speedup:.2f}x >= "
+              f"{args.min_spec_speedup:.2f}x baseline decode tokens/s")
     return rc
 
 

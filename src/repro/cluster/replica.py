@@ -76,6 +76,13 @@ class Replica:
         for req, tokens in stolen:
             self.submit(req, tokens, migrated=True)
 
+    def take_spec(self, rid: int) -> Optional[Tuple[int, int]]:
+        """Pop a finished request's ``(drafted, accepted)`` speculative-
+        decoding totals, or None when the replica never speculated on it.
+        The router collects this at finish time and feeds cluster telemetry
+        (deduped by ``(origin, rid)`` like migrations)."""
+        return None
+
     # -- health --------------------------------------------------------------
     def health(self) -> dict:
         return {"replica_id": self.replica_id, "place": self.place,
@@ -135,6 +142,10 @@ class EngineReplica(Replica):
     def steal_waiting_count(self, n: int) -> List[StolenItem]:
         return self.engine.export_waiting(count=n)
 
+    def take_spec(self, rid: int) -> Optional[Tuple[int, int]]:
+        spec = getattr(self.engine, "speculator", None)
+        return spec.take_record(rid) if spec is not None else None
+
     # -- health --------------------------------------------------------------
     def health(self) -> dict:
         h = super().health()
@@ -144,6 +155,10 @@ class EngineReplica(Replica):
         if getattr(self.engine, "prefix_cache", False):
             h["cached_kv_tokens"] = self.engine.alloc.cached_tokens
             h["cache_hit_rate"] = self.engine.cache_hit_rate()
+        if getattr(self.engine, "speculator", None) is not None:
+            s = self.engine.spec_stats
+            h["spec_acceptance_rate"] = s["acceptance_rate"]
+            h["spec_rounds"] = s["rounds"]
         return h
 
     # -- engine loop ---------------------------------------------------------

@@ -285,7 +285,9 @@ class ClusterRouter:
         done = []
         for rid, req in self.outstanding.items():
             if req.state == RequestState.DONE:
-                self._record_finish(req, self._owner.get(rid))
+                owner = self._owner.get(rid)
+                self._record_finish(req, owner)
+                self._collect_spec(req, owner)
                 done.append(rid)
             elif req.state == RequestState.CANCELLED:
                 self.telemetry.record_cancelled(
@@ -309,10 +311,24 @@ class ClusterRouter:
             req, req.finished_at if req.finished_at is not None
             else self.now(), replica_id, origin=self._origin.get(req.rid))
 
+    def _collect_spec(self, req: Request,
+                      replica_id: Optional[int]) -> None:
+        """Pull a finished request's speculative-decoding totals off the
+        replica that ran it, BEFORE the origin map drops the rid — the
+        (origin, rid) key dedupes replays exactly like migrations."""
+        if replica_id is None:
+            return
+        rec = self.replicas[replica_id].take_spec(req.rid)
+        if rec is not None:
+            self.telemetry.record_spec(
+                replica_id, rec[0], rec[1],
+                key=(self._origin.get(req.rid), req.rid))
+
     def on_finished(self, req: Request,
                     replica_id: Optional[int] = None) -> None:
         """Completion callback (the simulator pushes instead of polling)."""
         self._record_finish(req, replica_id)
+        self._collect_spec(req, replica_id)
         self.outstanding.pop(req.rid, None)
         self._owner.pop(req.rid, None)
         self._origin.pop(req.rid, None)

@@ -52,10 +52,41 @@ class SimClock:
 
 @dataclass(frozen=True)
 class ServiceModel:
-    """Modeled serving-step timings (tokens per second)."""
+    """Modeled serving-step timings (tokens per second).
+
+    Speculative decoding (``spec_k > 0``): a decode slot emits
+    ``E[m] = (1 - a^(k+1)) / (1 - a)`` tokens per round at acceptance rate
+    ``a`` (accepted drafts + the correction/bonus token), at a per-round
+    cost of one verify step (``1 + k * spec_verify_overhead`` of a plain
+    decode step — the batched k+1-wide pass) plus ``k`` draft steps at
+    ``spec_draft_cost`` each.  Effective decode throughput scales by
+    ``E[m] / cost`` — above 1 on greedy-friendly traffic, below 1 when the
+    draft disagrees (the adaptive-k engine would shrink k; the model is a
+    fixed-depth lower bound)."""
 
     prefill_rate: float = 8192.0     # prompt tokens/s while prefilling
     decode_rate: float = 64.0        # generated tokens/s per decode slot
+    spec_k: int = 0                  # speculation depth (0 = off)
+    spec_accept: float = 0.8         # default acceptance rate (per-request
+    #                                  ``Request.spec_accept`` overrides)
+    spec_draft_cost: float = 0.15    # draft step / target decode step
+    spec_verify_overhead: float = 0.02   # extra cost per verified draft
+
+    def accept_rate(self, req: Request) -> float:
+        a = req.spec_accept if req.spec_accept > 0 else self.spec_accept
+        return min(max(a, 0.0), 0.999)
+
+    def spec_tokens_per_round(self, req: Request) -> float:
+        a = self.accept_rate(req)
+        k = self.spec_k
+        return (1.0 - a ** (k + 1)) / (1.0 - a)
+
+    def spec_speedup(self, req: Request) -> float:
+        if self.spec_k <= 0:
+            return 1.0
+        k = self.spec_k
+        cost = 1.0 + k * self.spec_verify_overhead + k * self.spec_draft_cost
+        return self.spec_tokens_per_round(req) / cost
 
     def prefill_time(self, req: Request) -> float:
         # uncached remaining prefill only: a stolen (or chunked) request
@@ -64,9 +95,25 @@ class ServiceModel:
         # service time is hit-dependent
         return req.uncached_prefill / self.prefill_rate
 
+    def decode_time(self, req: Request) -> float:
+        return req.max_new_tokens / (self.decode_rate
+                                     * self.spec_speedup(req))
+
     def service_time(self, req: Request) -> float:
-        return self.prefill_time(req) + \
-            req.max_new_tokens / self.decode_rate
+        return self.prefill_time(req) + self.decode_time(req)
+
+    def spec_counters(self, req: Request) -> Tuple[int, int]:
+        """Expected ``(drafted, accepted)`` draft-token totals for a
+        finished request — what a live engine's per-request record holds."""
+        if self.spec_k <= 0:
+            return 0, 0
+        a = self.accept_rate(req)
+        k = self.spec_k
+        rounds = max(1.0, req.max_new_tokens / self.spec_tokens_per_round(req))
+        drafted = rounds * k
+        # accepted drafts per round: sum_{j=1..k} a^j
+        accepted = rounds * a * (1.0 - a ** k) / (1.0 - a)
+        return int(round(drafted)), int(round(accepted))
 
 
 class SimReplica(Replica):
@@ -101,6 +148,9 @@ class SimReplica(Replica):
         self.prefix_cache_tokens = prefix_cache_tokens
         self._pcache: "OrderedDict[int, int]" = OrderedDict()
         self._pcache_total = 0
+        #: rid -> (drafted, accepted): modeled speculation outcome, popped
+        #: by the router at finish time (mirrors Speculator.take_record)
+        self._spec: dict = {}
         self.sim: Optional["Simulation"] = None   # bound by Simulation
 
     # -- Replica interface ---------------------------------------------------
@@ -210,10 +260,17 @@ class SimReplica(Replica):
             self._cache_insert(req)       # shared prefix fully resident
         self.dispatch()
 
+    def take_spec(self, rid: int):
+        return self._spec.pop(rid, None)
+
     def _complete(self, req: Request) -> None:
         self.active -= 1
         req.prefilled = req.prompt_len
         req.generated = req.max_new_tokens
+        if self.service.spec_k > 0:
+            req.spec_k = self.service.spec_k
+            req.spec_accept = self.service.accept_rate(req)
+            self._spec[req.rid] = self.service.spec_counters(req)
         self._cache_insert(req)
         self.batcher.finish_running(req)
         req.state = RequestState.DONE
@@ -288,6 +345,10 @@ class ClassSpec:
     #: ``prefix_frac`` of the mean prompt length (0 = every prompt cold)
     prefix_groups: int = 0
     prefix_frac: float = 0.0
+    #: per-class draft acceptance rate when the cluster speculates
+    #: (0 = inherit the ServiceModel default); greedy-friendly traffic
+    #: (extraction, code completion) accepts high, creative traffic low
+    spec_accept: float = 0.0
 
     def mean_service(self, service: ServiceModel) -> float:
         return self.mean_prompt_len / service.prefill_rate + \
@@ -364,6 +425,8 @@ def synthetic_requests(num_requests: int, arrival_rate: float,
         new_toks[mask] = t
         prios[mask] = spec.priority
 
+    accepts = np.asarray([classes[c].spec_accept for c in which], np.float64)
+
     out = []
     for i in range(num_requests):
         def make(now: float, i=i) -> Request:
@@ -372,7 +435,8 @@ def synthetic_requests(num_requests: int, arrival_rate: float,
                            max_new_tokens=int(new_toks[i]),
                            priority=float(prios[i]), arrival=now,
                            prefix_group=g if g >= 0 else None,
-                           prefix_len=int(prefix_lens[i]))
+                           prefix_len=int(prefix_lens[i]),
+                           spec_accept=float(accepts[i]))
         out.append((float(arrivals[i]), make))
     return out
 
@@ -391,10 +455,14 @@ def run_cluster_sim(num_replicas: int, num_requests: int,
                     prefill_chunk: Optional[int] = None,
                     admission: str = "strategy",
                     prefix_cache_tokens: int = 0,
+                    spec_k: int = 0,
+                    spec_accept: float = 0.8,
                     seed: int = 0) -> ClusterTelemetry:
     """Build a simulated cluster, push a synthetic workload through the
-    shared router policy code, return the telemetry."""
-    service = service or ServiceModel()
+    shared router policy code, return the telemetry.  ``spec_k > 0``
+    switches every replica to speculative decoding at that depth
+    (acceptance ``spec_accept`` unless the workload's classes override)."""
+    service = service or ServiceModel(spec_k=spec_k, spec_accept=spec_accept)
     classes = tuple(classes) if classes is not None else \
         default_workload(size_dist=size_dist, pareto_alpha=pareto_alpha)
     clock = SimClock()

@@ -78,7 +78,8 @@ class LatencyHistogram:
 class _ReplicaStats:
     __slots__ = ("finished", "tokens", "steals_out", "steals_in",
                  "requests_migrated_out", "weight_migrated_out",
-                 "prefix_hit_tokens", "prefix_miss_tokens")
+                 "prefix_hit_tokens", "prefix_miss_tokens",
+                 "spec_drafted", "spec_accepted")
 
     def __init__(self):
         self.finished = 0
@@ -89,6 +90,8 @@ class _ReplicaStats:
         self.weight_migrated_out = 0
         self.prefix_hit_tokens = 0
         self.prefix_miss_tokens = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
 
     def as_dict(self) -> dict:
         return {k: getattr(self, k) for k in self.__slots__}
@@ -112,8 +115,16 @@ class ClusterTelemetry:
         self.deadline_misses = 0
         self.prefix_hit_tokens = 0
         self.prefix_miss_tokens = 0
+        self.spec_drafted_tokens = 0
+        self.spec_accepted_tokens = 0
+        self.spec_requests = 0
+        #: running per-request acceptance-rate summary (constant memory)
+        self._spec_rate_sum = 0.0
+        self._spec_rate_min = 1.0
+        self._spec_rate_max = 0.0
         self._seen: set = set()
         self._migrated: set = set()
+        self._spec_seen: set = set()
 
     # -- recording -----------------------------------------------------------
     def _hist(self, table: Dict[float, LatencyHistogram],
@@ -182,6 +193,37 @@ class ClusterTelemetry:
         total = self.prefix_hit_tokens + self.prefix_miss_tokens
         return self.prefix_hit_tokens / total if total else 0.0
 
+    def record_spec(self, replica_id: Optional[int], drafted: int,
+                    accepted: int, key=None) -> None:
+        """Speculative-decoding outcome of one finished request:
+        ``drafted`` draft tokens proposed, ``accepted`` of them verified.
+        Deduped by migration key — the same ``(origin, rid)`` rule as
+        :meth:`record_steal`: a request that migrated mid-stream can be
+        reported by more than one replica, and bare rids alias across entry
+        processes."""
+        if drafted <= 0:
+            return
+        if key is not None:
+            if key in self._spec_seen:
+                return
+            self._spec_seen.add(key)
+        self.spec_drafted_tokens += drafted
+        self.spec_accepted_tokens += accepted
+        self.spec_requests += 1
+        rate = accepted / drafted
+        self._spec_rate_sum += rate
+        self._spec_rate_min = min(self._spec_rate_min, rate)
+        self._spec_rate_max = max(self._spec_rate_max, rate)
+        if replica_id is not None:
+            st = self.replicas[replica_id]
+            st.spec_drafted += drafted
+            st.spec_accepted += accepted
+
+    @property
+    def spec_acceptance_rate(self) -> float:
+        return self.spec_accepted_tokens / self.spec_drafted_tokens \
+            if self.spec_drafted_tokens else 0.0
+
     def record_steal(self, src: int, dst: int, requests: int,
                      weight: int,
                      rids: Optional[Sequence] = None) -> None:
@@ -235,6 +277,21 @@ class ClusterTelemetry:
                 "hit_tokens": self.prefix_hit_tokens,
                 "miss_tokens": self.prefix_miss_tokens,
                 "hit_rate": self.prefix_hit_rate,
+            },
+            "spec": {
+                "drafted_tokens": self.spec_drafted_tokens,
+                "accepted_tokens": self.spec_accepted_tokens,
+                "wasted_tokens": (self.spec_drafted_tokens
+                                  - self.spec_accepted_tokens),
+                "acceptance_rate": self.spec_acceptance_rate,
+                "requests": self.spec_requests,
+                "per_request_rate": {
+                    "mean": (self._spec_rate_sum / self.spec_requests
+                             if self.spec_requests else 0.0),
+                    "min": (self._spec_rate_min
+                            if self.spec_requests else 0.0),
+                    "max": self._spec_rate_max,
+                },
             },
             "per_class": {str(k): self.class_percentiles(k)
                           for k in sorted(self.per_class)},

@@ -81,6 +81,12 @@ class Request:
     #: (None = cold prompt); live engines hash real tokens instead
     prefix_group: Optional[int] = None
     prefix_len: int = 0
+    #: speculative decoding: current per-request depth hint (0 = not
+    #: speculated) and running acceptance-rate estimate — set by the
+    #: engine's Speculator (or the sim's workload model); reset is not
+    #: needed on migration because in-flight speculation never travels
+    spec_k: int = 0
+    spec_accept: float = 0.0
 
     @property
     def est_remaining_work(self) -> int:

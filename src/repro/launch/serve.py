@@ -29,7 +29,7 @@ from ..cluster import (ClusterRouter, ClusterTelemetry, EngineReplica,
 from ..configs import get_config, scale_down
 from ..core.device.request_scheduler import Request
 from ..models import build_model
-from ..serving import ServingEngine
+from ..serving import ServingEngine, Speculator
 
 
 def _make_prompts(args, cfg):
@@ -59,6 +59,50 @@ def _engine_kw(args):
                 overflow=args.overflow)
 
 
+def _build_draft(args, model, params, cfg):
+    """Resolve ``--spec-draft`` into a ``(model, params)`` pair, failing
+    fast — unknown zoo name, vocab mismatch, or a family that cannot draft
+    is a clear error *before* any engine or cache is built."""
+    name = args.spec_draft
+    if name is None:
+        return None
+    if name == "self":
+        return model, params
+    try:
+        dcfg = get_config(name)
+    except KeyError:
+        print(f"--spec-draft {name!r}: unknown zoo config", file=sys.stderr)
+        raise SystemExit(2)
+    tcfg = get_config(args.arch)
+    if dcfg.vocab_size != tcfg.vocab_size:
+        print(f"--spec-draft {name!r}: vocab {dcfg.vocab_size} != target "
+              f"{args.arch!r} vocab {tcfg.vocab_size} — draft and target "
+              f"must share a tokenizer", file=sys.stderr)
+        raise SystemExit(2)
+    if dcfg.family not in ("dense", "moe", "vlm"):
+        print(f"--spec-draft {name!r}: family {dcfg.family!r} cannot draft "
+              f"(speculation needs a positional KV cache for rollback)",
+              file=sys.stderr)
+        raise SystemExit(2)
+    if args.smoke:
+        dcfg = scale_down(dcfg, layers=2, d_model=256, d_ff=1024,
+                          vocab=cfg.vocab_size)
+    dcfg = dcfg.replace(use_flash=cfg.use_flash)
+    dmodel = build_model(dcfg)
+    dparams = dmodel.init(jax.random.PRNGKey(args.seed + 1))
+    return dmodel, dparams
+
+
+def _make_spec(args, draft) -> "Speculator | None":
+    """One Speculator per engine: it owns a per-slot draft cache sized to
+    the engine it attaches to, so replicas cannot share an instance."""
+    if draft is None:
+        return None
+    dmodel, dparams = draft
+    return Speculator(dmodel, dparams, k=args.spec_k,
+                      adaptive=args.spec_adaptive)
+
+
 def _run_engine(eng, prompts, args):
     reqs = [eng.submit(p, max_new_tokens=args.max_new_tokens,
                        priority=float(i % 3))
@@ -67,8 +111,9 @@ def _run_engine(eng, prompts, args):
     return reqs, outs
 
 
-def _serve_single(args, model, params, cfg) -> None:
-    eng = ServingEngine(model, params, **_engine_kw(args))
+def _serve_single(args, model, params, cfg, draft=None) -> None:
+    eng = ServingEngine(model, params, speculator=_make_spec(args, draft),
+                        **_engine_kw(args))
     t0 = time.perf_counter()
     reqs, outs = _run_engine(eng, _make_prompts(args, cfg), args)
     dt = time.perf_counter() - t0
@@ -92,9 +137,16 @@ def _serve_single(args, model, params, cfg) -> None:
               f"{eng.alloc.cached_tokens} tokens cached at drain, "
               f"evictions={eng.alloc.cache_evictions} "
               f"cow_forks={eng.alloc.cow_forks}")
+    if eng.speculator is not None:
+        s = eng.spec_stats
+        print(f"speculative: rounds={s['rounds']} drafted={s['drafted']} "
+              f"accepted={s['accepted']} "
+              f"acceptance={s['acceptance_rate']:.2f} "
+              f"merged_drafts={s['merged_drafts']} shed={s['shed']} "
+              f"verify_calls={s['verify_calls']}")
 
 
-def _check_paged_equality(args, model, params, cfg) -> int:
+def _check_paged_equality(args, model, params, cfg, draft=None) -> int:
     """CI gate: the paged engine must generate exactly what the contiguous
     engine generates (fp32 bit-identical; bf16 identical in practice since
     the gathered logical views match the dense cache bit-for-bit).  Also
@@ -104,22 +156,34 @@ def _check_paged_equality(args, model, params, cfg) -> int:
     prompts = _make_prompts(args, cfg)
     results = {}
     cache_eng = None
-    for mode, over in [
-            ("contiguous", dict(kv_mode="contiguous", prefill_chunk=None,
-                                prefix_cache=False)),
-            ("paged", dict(kv_mode="paged", prefill_chunk=None,
-                           prefix_cache=False)),
-            ("paged+chunked", dict(kv_mode="paged",
-                                   prefill_chunk=args.prefill_chunk or 8,
-                                   prefix_cache=False)),
-            ("paged+cache", dict(kv_mode="paged",
-                                 prefill_chunk=args.prefill_chunk or 8,
-                                 prefix_cache=True))]:
+    modes = [
+        ("contiguous", dict(kv_mode="contiguous", prefill_chunk=None,
+                            prefix_cache=False)),
+        ("paged", dict(kv_mode="paged", prefill_chunk=None,
+                       prefix_cache=False)),
+        ("paged+chunked", dict(kv_mode="paged",
+                               prefill_chunk=args.prefill_chunk or 8,
+                               prefix_cache=False)),
+        ("paged+cache", dict(kv_mode="paged",
+                             prefill_chunk=args.prefill_chunk or 8,
+                             prefix_cache=True))]
+    if draft is not None:
+        # speculative decode must be greedy-exact: accepted tokens are
+        # bit-identical to what the non-speculative engine emits
+        modes.append(("paged+spec", dict(kv_mode="paged",
+                                         prefill_chunk=None,
+                                         prefix_cache=False)))
+    for mode, over in modes:
         if mode != "contiguous" and not model.supports_paged:
             print(f"{mode}: family {cfg.family!r} has no paged path — skip")
             continue
+        if mode == "paged+spec" and not model.supports_speculation:
+            print(f"{mode}: family {cfg.family!r} has no verify kernel "
+                  f"— skip")
+            continue
         kw = dict(_engine_kw(args), **over)   # --num-blocks etc. flow in
-        eng = ServingEngine(model, params, **kw)
+        spec = _make_spec(args, draft) if mode == "paged+spec" else None
+        eng = ServingEngine(model, params, speculator=spec, **kw)
         if mode == "paged+cache" and not eng.prefix_cache:
             print(f"{mode}: family {cfg.family!r} has no chunk kernel — skip")
             continue
@@ -172,12 +236,24 @@ def _check_paged_equality(args, model, params, cfg) -> int:
         print(f"OK: prefix-cached prefill token counts match "
               f"(token-exact: {same}, hit_rate="
               f"{cache_eng.cache_hit_rate():.2f})")
+    spec_outs = results.get("paged+spec")
+    if spec_outs is not None:
+        if spec_outs != results["contiguous"]:
+            bad = sum(1 for a, b in zip(spec_outs, results["contiguous"])
+                      if a != b)
+            print(f"FAIL: speculative vs contiguous decode mismatch on "
+                  f"{bad}/{len(prompts)} requests", file=sys.stderr)
+            return 1
+        print(f"OK: speculative decode == contiguous decode "
+              f"(draft={args.spec_draft}, k={args.spec_k})")
     return 0
 
 
-def _serve_cluster(args, model, params, cfg) -> None:
+def _serve_cluster(args, model, params, cfg, draft=None) -> None:
     replicas = [
-        EngineReplica(i, ServingEngine(model, params, **_engine_kw(args)))
+        EngineReplica(i, ServingEngine(model, params,
+                                       speculator=_make_spec(args, draft),
+                                       **_engine_kw(args)))
         for i in range(args.replicas)]
     policy = StealPolicy(amount=args.steal, placement=args.placement)
     router = ClusterRouter(replicas, policy=policy,
@@ -199,6 +275,12 @@ def _serve_cluster(args, model, params, cfg) -> None:
     print(f"completed {done}/{len(reqs)} requests, {toks} tokens in "
           f"{dt:.2f}s ({toks / dt:.1f} tok/s) on {args.replicas} replicas")
     print(router.telemetry.report())
+    spec = router.telemetry.summary()["spec"]
+    if spec["drafted_tokens"]:
+        print(f"speculative: drafted={spec['drafted_tokens']} "
+              f"accepted={spec['accepted_tokens']} "
+              f"acceptance={spec['acceptance_rate']:.2f} "
+              f"requests={spec['requests']}")
     for h in router.health():
         print(f"  replica {h['replica_id']}: backlog={h['backlog_weight']} "
               f"waiting={h['waiting']} active={h['active']}"
@@ -248,6 +330,19 @@ def main() -> int:
                     help="requests whose prompt+budget exceed the KV ring: "
                          "reject at submit (default), truncate the token "
                          "budget, or allow the legacy self-corrupting wrap")
+    ap.add_argument("--spec-draft", default=None,
+                    help="speculative decoding: zoo config to draft with "
+                         "('self' = the target drafts for itself); the "
+                         "draft must share the target's vocab and have a "
+                         "positional KV cache (dense/moe/vlm)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per speculation round")
+    ap.add_argument("--spec-adaptive", dest="spec_adaptive",
+                    action="store_true", default=True,
+                    help="adapt per-request k from the acceptance-rate EMA "
+                         "(default on)")
+    ap.add_argument("--no-spec-adaptive", dest="spec_adaptive",
+                    action="store_false")
     ap.add_argument("--check-paged-equality", action="store_true",
                     help="CI gate: paged and contiguous engines must "
                          "generate identical tokens (exit 1 on mismatch)")
@@ -273,12 +368,13 @@ def main() -> int:
         cfg = cfg.replace(use_flash=args.use_flash)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
+    draft = _build_draft(args, model, params, cfg)
     if args.check_paged_equality:
-        return _check_paged_equality(args, model, params, cfg)
+        return _check_paged_equality(args, model, params, cfg, draft)
     if args.replicas > 1:
-        _serve_cluster(args, model, params, cfg)
+        _serve_cluster(args, model, params, cfg, draft)
     else:
-        _serve_single(args, model, params, cfg)
+        _serve_single(args, model, params, cfg, draft)
     return 0
 
 

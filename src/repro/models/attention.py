@@ -19,7 +19,8 @@ from .layers import apply_rope, init_linear, init_rms_norm, linear, rms_norm
 
 __all__ = ["init_attention", "attention_fwd", "attention_decode", "KVCache",
            "PagedKVCache", "attention_decode_paged",
-           "attention_prefill_chunk_paged", "init_paged_kv_cache"]
+           "attention_prefill_chunk_paged", "attention_verify_paged",
+           "init_paged_kv_cache"]
 
 
 class KVCache(NamedTuple):
@@ -275,6 +276,47 @@ def attention_decode_paged(p: dict, x: jax.Array, cache: PagedKVCache,
     v_log = v_pool[table].reshape(b, cap, *cache.v.shape[2:])
     out = _attend_decode(q, k_log, v_log, pos_vec, cfg)
     y = linear(p["wo"], out.reshape(b, 1, -1))
+    return y, PagedKVCache(k_pool, v_pool)
+
+
+def attention_verify_paged(p: dict, x: jax.Array, cache: PagedKVCache,
+                           table: jax.Array, pos: jax.Array,
+                           cfg: ModelConfig) -> tuple[jax.Array, PagedKVCache]:
+    """Batched multi-token decode for speculative verification: ``c`` query
+    tokens per sequence at absolute positions ``pos[b] .. pos[b]+c-1``, each
+    batch row through its own block table.  The bottom-right-causal mask of
+    :func:`attention_prefill_chunk_paged` generalized to a batch: row ``i``
+    of sequence ``b`` attends logical columns ``j <= pos[b]+i`` (within the
+    sliding window), so with ``c == 1`` this is exactly
+    :func:`attention_decode_paged`'s masked path — which is what makes the
+    accepted tokens of a greedy verify bit-identical to sequential decode.
+    x: [B, c, D]; table: [B, max_blocks]; pos: [B] int32.  Requires
+    ``pos[b] + c <= cap`` for live rows (no ring wrap — the engine falls
+    back to plain decode near the wrap point); inactive batch slots are
+    routed to an all-sink table row, whose contents are garbage by design
+    and never read unmasked.  Always the masked XLA path, like chunked
+    prefill (the flash kernel's ``q_offset`` is static per shape)."""
+    b, c, _ = x.shape
+    bs = cache.k.shape[1]
+    cap = table.shape[1] * bs
+    hd = cfg.resolved_head_dim
+    pos_vec = jnp.broadcast_to(jnp.asarray(pos).reshape(-1), (b,))
+    rows = pos_vec[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]  # [B,c]
+    q, k_new, v_new = _project_qkv(p, x, cfg, rows)
+    slot = rows % cap
+    blk = jnp.take_along_axis(table, slot // bs, axis=1)       # [B, c]
+    off = slot % bs
+    k_pool = cache.k.at[blk, off].set(k_new.astype(cache.k.dtype))
+    v_pool = cache.v.at[blk, off].set(v_new.astype(cache.v.dtype))
+    k_log = k_pool[table].reshape(b, cap, *cache.k.shape[2:])
+    v_log = v_pool[table].reshape(b, cap, *cache.v.shape[2:])
+    j = jnp.arange(cap, dtype=jnp.int32)[None, None, :]
+    r = rows[:, :, None]
+    valid = j <= r
+    if cfg.sliding_window is not None:
+        valid &= r - j < cfg.sliding_window
+    out = _sdpa(q, k_log, v_log, valid, hd ** -0.5)
+    y = linear(p["wo"], out.reshape(b, c, -1))
     return y, PagedKVCache(k_pool, v_pool)
 
 

@@ -32,14 +32,31 @@ class Model:
     #   decode_step_paged(params, token, cache, table, pos)
     #   insert_prefill_paged(cache, dense_cache_B1, table_row, slot)
     #   prefill_chunk_paged(params, batch, cache, table_row, start)
+    #   verify_paged(params, tokens_Bc, cache, table, pos) — speculative
+    #     verification: all-position logits for c tokens per sequence
+    #     (pure-attention trunks only; SSM/hybrid state is not positional,
+    #     so rejected draft state could not be rolled back)
     init_paged_cache: Optional[Callable[..., Any]] = None
     decode_step_paged: Optional[Callable[..., tuple]] = None
     insert_prefill_paged: Optional[Callable[..., Any]] = None
     prefill_chunk_paged: Optional[Callable[..., tuple]] = None
+    verify_paged: Optional[Callable[..., tuple]] = None
 
     @property
     def supports_paged(self) -> bool:
         return self.decode_step_paged is not None
+
+    @property
+    def supports_speculation(self) -> bool:
+        """Can act as a speculative-decoding *target* (paged verify path)."""
+        return self.verify_paged is not None
+
+    @property
+    def supports_drafting(self) -> bool:
+        """Can act as a *draft* model: any family with a standalone
+        contiguous cache and decode step (enc-dec caches need the encoder
+        pass, so they cannot chain greedy draft steps slot-aligned)."""
+        return self.init_cache is not None
 
     def loss(self, params: dict, batch: dict) -> tuple[jax.Array, dict]:
         return lm_loss(self, params, batch)
@@ -69,6 +86,8 @@ def build_model(cfg: ModelConfig) -> Model:
             prefill_chunk_paged=lambda p, b, cache, row, start:
                 transformer.lm_prefill_chunk_paged(p, b, cache, row, start,
                                                    cfg),
+            verify_paged=lambda p, toks, cache, table, pos:
+                transformer.lm_verify_paged(p, toks, cache, table, pos, cfg),
         )
     if fam == "ssm":
         return Model(

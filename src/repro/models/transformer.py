@@ -16,8 +16,8 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from .attention import (KVCache, PagedKVCache, attention_decode,
                         attention_decode_paged, attention_fwd,
-                        attention_prefill_chunk_paged, init_attention,
-                        init_kv_cache, init_paged_kv_cache)
+                        attention_prefill_chunk_paged, attention_verify_paged,
+                        init_attention, init_kv_cache, init_paged_kv_cache)
 from .layers import (dtype_of, embed, init_embedding, init_linear,
                      init_mlp, init_rms_norm, linear, mlp, rms_norm)
 from .moe import MoEStats, init_moe, moe_fwd
@@ -25,7 +25,7 @@ from .moe import MoEStats, init_moe, moe_fwd
 __all__ = ["init_lm", "lm_forward", "lm_prefill", "lm_decode_step",
            "init_lm_cache", "LMOutputs", "init_lm_paged_cache",
            "lm_decode_step_paged", "lm_prefill_chunk_paged",
-           "lm_insert_prefill_paged"]
+           "lm_insert_prefill_paged", "lm_verify_paged"]
 
 
 class LMOutputs(NamedTuple):
@@ -298,6 +298,38 @@ def lm_prefill_chunk_paged(params: dict, batch: dict, cache: PagedKVCache,
     x = rms_norm(params["ln_f"], x, cfg.norm_eps)
     logits = _unembed(params, x[:, -1:], cfg)
     return logits, PagedKVCache(new_cache.k, new_cache.v)
+
+
+def lm_verify_paged(params: dict, tokens: jax.Array, cache: PagedKVCache,
+                    table: jax.Array, pos: jax.Array, cfg: ModelConfig):
+    """Speculative verification step: run ``c`` tokens per sequence
+    (``tokens`` [B, c] — the last accepted token followed by the draft's
+    proposals) through the paged cache at absolute positions
+    ``pos[b] .. pos[b]+c-1`` and return **all-position** logits [B, c, V]
+    (unlike :func:`lm_prefill_chunk_paged`, every row's argmax matters: row
+    ``i`` decides whether draft token ``i+1`` is accepted).  With dropless
+    MoE routing the per-token computation is independent of its batch
+    neighbours, so the logits match ``c`` sequential
+    :func:`lm_decode_step_paged` calls."""
+    x = embed(params["embed"], tokens, cfg.onehot_embed)
+
+    def body(h, layer):
+        pl, ck, cv = layer
+        z = rms_norm(pl["ln1"], h, cfg.norm_eps)
+        attn, new_c = attention_verify_paged(
+            pl["attn"], z, PagedKVCache(ck, cv), table, pos, cfg)
+        hh = h + attn
+        zz = rms_norm(pl["ln2"], hh, cfg.norm_eps)
+        if _is_moe(cfg):
+            y, _ = moe_fwd(pl["moe"], zz, cfg, use_kernel=cfg.use_flash)
+        else:
+            y = mlp(pl["mlp"], zz)
+        return hh + y, new_c
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache.k, cache.v),
+                                unroll=cfg.unroll_scans)
+    x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+    return _unembed(params, x, cfg), PagedKVCache(new_cache.k, new_cache.v)
 
 
 def lm_insert_prefill_paged(cache: PagedKVCache, dense: KVCache,

@@ -2,6 +2,10 @@ from ..core.device.request_scheduler import AdmissionRejected
 from .engine import ServingEngine
 from .paged_kv import (SINK_BLOCK, BlockAllocator, PoolExhausted,
                        prefix_block_keys)
+from .speculative import (DraftStrategy, SpecStrategy, Speculator,
+                          VerifyStrategy, accept_longest_prefix)
 
 __all__ = ["ServingEngine", "AdmissionRejected", "BlockAllocator",
-           "PoolExhausted", "SINK_BLOCK", "prefix_block_keys"]
+           "PoolExhausted", "SINK_BLOCK", "prefix_block_keys",
+           "Speculator", "SpecStrategy", "DraftStrategy", "VerifyStrategy",
+           "accept_longest_prefix"]

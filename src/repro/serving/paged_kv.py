@@ -229,6 +229,35 @@ class BlockAllocator:
             return 0
         return self.free(rid)
 
+    def truncate(self, rid: int, tokens: int) -> int:
+        """Speculation rollback: shrink ``rid``'s table from the *tail* to
+        exactly cover ``tokens`` logical tokens, dropping the blocks that
+        only held rejected draft K/V.  Trailing blocks are released with
+        :meth:`free` semantics — refcounts decrement, shared blocks survive
+        in the other tables, published zero-ref blocks join the cached LRU
+        tail — so a rollback can never corrupt a published prefix, only
+        un-hold it.  Returns the number of table entries dropped."""
+        table = self._tables.get(rid)
+        if table is None:
+            return 0
+        keep = self.blocks_for_tokens(tokens)
+        dropped = 0
+        while len(table) > keep:
+            b = table.pop()
+            dropped += 1
+            n = self._refs[b] - 1
+            if n > 0:
+                self._refs[b] = n
+                continue
+            del self._refs[b]
+            if b in self._key_of:
+                self._lru[b] = None          # cached: evictable, adoptable
+            else:
+                self._free.append(b)
+        if dropped:
+            self.version += 1
+        return dropped
+
     # -- prefix cache ---------------------------------------------------------
     def match_prefix(self, keys: Sequence[Hashable]) -> int:
         """Longest cached chain: number of leading ``keys`` present in the
