@@ -24,7 +24,10 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.cluster import StealPolicy, run_cluster_sim  # noqa: E402
+from repro.cluster import (ArrivalPattern, ChaosSchedule,  # noqa: E402
+                           FlashCrowd, StealPolicy, offered_rate,
+                           run_cluster_sim)
+from repro.cluster.sim import ServiceModel, default_workload  # noqa: E402
 
 POLICIES = {
     "steal-half-work": StealPolicy(amount="half_work", victim="random",
@@ -54,6 +57,12 @@ def main() -> None:
     ap.add_argument("--out", default="BENCH_cluster.json")
     ap.add_argument("--headline", action="store_true",
                     help="only the heavy-tail half-work vs half-count pair")
+    ap.add_argument("--chaos", action="store_true",
+                    help="inject a seeded fault schedule (crashes + "
+                         "stragglers) and a flash crowd into every policy "
+                         "run — same schedule for all policies")
+    ap.add_argument("--crashes", type=int, default=3)
+    ap.add_argument("--slowdowns", type=int, default=3)
     args = ap.parse_args()
 
     if args.headline:
@@ -72,23 +81,46 @@ def main() -> None:
                 ap.error(f"unknown policy {name!r}; choose from "
                          f"{', '.join(POLICIES)}")
             pol = POLICIES[name]
+            chaos = arrival = None
+            if args.chaos:
+                # fault times at fractions of the expected duration so the
+                # same schedule scales with --requests; identical for every
+                # policy at a given seed/dist
+                classes = default_workload(size_dist=dist,
+                                           pareto_alpha=args.pareto_alpha)
+                rate = offered_rate(args.replicas, args.slots,
+                                    args.utilization, classes,
+                                    ServiceModel())
+                horizon = args.requests / rate
+                chaos = ChaosSchedule.random(
+                    args.replicas, horizon, crashes=args.crashes,
+                    slowdowns=args.slowdowns,
+                    slow_duration=0.1 * horizon, seed=args.seed)
+                arrival = ArrivalPattern(flash_crowds=(
+                    FlashCrowd(start=0.45 * horizon,
+                               duration=0.1 * horizon, multiplier=2.0),))
             t0 = time.perf_counter()
             tel = run_cluster_sim(
                 args.replicas, args.requests, pol,
                 utilization=args.utilization, size_dist=dist,
                 pareto_alpha=args.pareto_alpha, slots=args.slots,
-                seed=args.seed)
+                chaos=chaos, arrival=arrival, seed=args.seed)
             wall = time.perf_counter() - t0
             s = tel.summary()
             s["wall_seconds"] = wall
             results["runs"][f"{dist}/{name}"] = s
             inter = tel.class_percentiles(0.0)
             bulk = tel.class_percentiles(1.0)
+            extra = ""
+            if args.chaos:
+                ch = s["chaos"]
+                extra = (f" replayed={ch['requests_replayed']:4d} "
+                         f"p99_uf={ch['p99_under_failure_s']:6.2f}s")
             print(f"{dist:12s} {name:24s} wall={wall:6.1f}s "
                   f"steals={s['steal_events']:6d} "
                   f"migrated_w={s['weight_migrated']:9d} "
                   f"inter_p99={inter.get('p99_s', 0):7.3f}s "
-                  f"bulk_p99={bulk.get('p99_s', 0):7.2f}s",
+                  f"bulk_p99={bulk.get('p99_s', 0):7.2f}s" + extra,
                   flush=True)
 
     runs = results["runs"]

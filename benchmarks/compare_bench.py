@@ -45,12 +45,21 @@ HIGHER_BETTER = {
     "merged_speedup_vs_unmerged", "chunked_speedup_vs_fifo_p99",
     "prefix_cache_speedup_p99", "cache_hit_rate", "hit_rate",
     "spec_on_tok_per_s", "spec_off_tok_per_s", "spec_decode_speedup",
+    "chaos_autoscale_speedup_p99_under_failure",
 }
 LOWER_BETTER = {
     "p50_s", "p90_s", "p99_s", "mean_s", "max_s", "pallas_us", "ref_us",
     "us_per_call", "time_s", "interactive_p99_fifo_s",
     "interactive_p99_strategy_s", "interactive_p99_chunked_s",
     "interactive_p99_cache_on_s", "interactive_p99_cache_off_s",
+    # chaos recovery: time from a crash to the last displaced request
+    # reaching a terminal outcome, and tail latency of requests finishing
+    # while a failure window is open
+    "recovery_mean_s", "recovery_max_s", "p99_under_failure_s",
+    "chaos_p99_under_failure_static_s",
+    "chaos_p99_under_failure_autoscale_s",
+    "chaos_p99_under_failure_costmodel_s",
+    "chaos_recovery_mean_static_s", "chaos_recovery_mean_autoscale_s",
 }
 ABSOLUTE = {"max_err"}
 #: run-describing numbers with no quality direction: workload/config
@@ -76,6 +85,15 @@ NEUTRAL = {
     "drafted_tokens", "accepted_tokens", "wasted_tokens",
     "acceptance_rate", "spec_acceptance_rate", "spec_drafted",
     "spec_accepted", "mean", "min", "max",
+    # chaos/autoscale event counters: fault-schedule and fleet-size facts,
+    # not quality directions (the gated signals are the recovery/p99 keys)
+    "crashes", "slowdowns", "requests_replayed", "recoveries",
+    "finished_under_failure", "scale_ups", "scale_downs", "replicas_added",
+    "replicas_retired", "replicas_peak", "replicas_final",
+    "chaos_replayed_static", "chaos_replayed_autoscale",
+    "chaos_replayed_costmodel",
+    # numeric leaves of the telemetry event trace ({"t", "kind", ...})
+    "t", "replica", "displaced", "delta", "alive", "factor",
 }
 #: wall-clock of whole benchmark phases — too machine-dependent to gate
 IGNORED = {"wall_seconds"}

@@ -29,15 +29,26 @@ Both runs see the *identical* arrival process (the offered-load formula
 uses the nominal non-speculative service time), so speculation's win is
 measured as completion-latency reduction = decode tokens/s gained.
 
+Part 4 is chaos hardening: the same fleet under replica crashes, a
+straggler slowdown, diurnal drift and a flash crowd — a fixed fleet
+(``chaos_static``) vs telemetry-driven autoscaling with reactive
+cache-affinity stealing (``chaos_autoscale``) vs autoscaling with
+estee-style cost-model placement and no stealing (``chaos_costmodel``).
+All three see the identical arrival process and the identical fault
+schedule; the autoscaler reacts to the cache-hit-adjusted backlog signal.
+
 Headline gates (CI): interactive p99 under ``strategy+chunked`` must beat
 FIFO by >= 1.2x (``--assert-chunked-wins``); prefix cache on must beat
 cache off by >= 1.3x interactive p99 (``--assert-cache-wins``);
 speculative decode must deliver >= 1.5x decode tokens/s
-(``--assert-spec-wins``).
+(``--assert-spec-wins``); under chaos, every request must finish in every
+variant and autoscaling must improve p99-under-failure over the static
+fleet by >= 1.1x without worsening mean recovery time
+(``--assert-chaos-wins``).
 
 Run:  PYTHONPATH=src python benchmarks/serving_bench.py --quick \
           --assert-chunked-wins --assert-cache-wins --assert-spec-wins \
-          [--out BENCH_serving.json]
+          --assert-chaos-wins [--out BENCH_serving.json]
 """
 from __future__ import annotations
 
@@ -48,8 +59,11 @@ import time
 
 sys.path.insert(0, "src")
 
-from repro.cluster import ClassSpec, StealPolicy, run_cluster_sim
+from repro.cluster import (ArrivalPattern, ClassSpec, ChaosSchedule,
+                           FlashCrowd, StealPolicy, offered_rate,
+                           run_cluster_sim)
 from repro.cluster.sim import ServiceModel
+from repro.runtime import AutoscalePolicy
 
 #: interactive tier (short, latency-sensitive) + bulk tier whose *prompts*
 #: are heavy-tailed — prefill occupancy is what blocks the interactive tier
@@ -99,6 +113,42 @@ SPEC_VARIANTS = {
     "spec_on": dict(spec_k=4),
 }
 
+#: chaos traffic: an interactive shared-prefix tier (crash replay re-adopts
+#: the published chain and re-prefills only the remainder) + a cold bulk
+#: tier; arrivals drift diurnally and spike in a flash crowd while replicas
+#: crash and straggle mid-run
+CHAOS_WORKLOAD = (
+    ClassSpec(priority=0.0, share=0.6, mean_prompt_len=1024,
+              mean_new_tokens=16, prefix_groups=4, prefix_frac=0.8),
+    ClassSpec(priority=1.0, share=0.4, mean_prompt_len=2048,
+              mean_new_tokens=32, prompt_dist="pareto",
+              prompt_pareto_alpha=1.5),
+)
+
+
+def chaos_variants(replicas: int):
+    """Fleet policies compared under the identical fault schedule: a fixed
+    fleet, elastic + reactive cache-affinity stealing, and elastic +
+    estee-style cost-model placement (no stealing — the cost model places
+    each request where its estimated completion is earliest)."""
+    elastic = AutoscalePolicy(min_replicas=replicas,
+                              max_replicas=2 * replicas,
+                              target_backlog=2048.0, up_ticks=2,
+                              down_ticks=8, cooldown_s=1.0)
+    return {
+        "chaos_static": dict(
+            policy=StealPolicy(amount="half_work",
+                               placement="cache_affinity"),
+            autoscale=None),
+        "chaos_autoscale": dict(
+            policy=StealPolicy(amount="half_work",
+                               placement="cache_affinity"),
+            autoscale=elastic),
+        "chaos_costmodel": dict(
+            policy=StealPolicy(amount="none", placement="cost_model"),
+            autoscale=elastic),
+    }
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
@@ -123,6 +173,13 @@ def main(argv=None) -> int:
                          "delivers >= --min-spec-speedup decode tokens/s "
                          "vs the non-speculative baseline")
     ap.add_argument("--min-spec-speedup", type=float, default=1.5)
+    ap.add_argument("--assert-chaos-wins", action="store_true",
+                    help="fail unless every chaos variant finishes all "
+                         "requests and autoscaling improves p99-under-"
+                         "failure over the static fleet by >= "
+                         "--min-chaos-speedup without worsening mean "
+                         "recovery time")
+    ap.add_argument("--min-chaos-speedup", type=float, default=1.1)
     args = ap.parse_args(argv)
 
     requests = args.requests or (4000 if args.quick else 20_000)
@@ -186,6 +243,41 @@ def main(argv=None) -> int:
               f"p99={c.get('p99_s', 0):7.3f}s "
               f"accept={s['spec']['acceptance_rate']:.3f}", flush=True)
 
+    # -- part 4: chaos hardening — crashes + flash crowd, static vs elastic --
+    # fault times are scheduled at fractions of the expected run duration
+    # T = requests / offered_rate, so the same schedule scales from --quick
+    # to full runs
+    rate = offered_rate(args.replicas, args.slots, args.utilization,
+                        CHAOS_WORKLOAD, service)
+    horizon = requests / rate
+    chaos = ChaosSchedule.random(args.replicas, horizon, crashes=2,
+                                 slowdowns=1, slow_factor=0.25,
+                                 slow_duration=0.1 * horizon,
+                                 seed=args.seed)
+    arrival = ArrivalPattern(
+        diurnal_amplitude=0.3, diurnal_period=horizon,
+        flash_crowds=(FlashCrowd(start=0.45 * horizon,
+                                 duration=0.1 * horizon, multiplier=2.5),))
+    for name, kw in chaos_variants(args.replicas).items():
+        t0 = time.perf_counter()
+        tel = run_cluster_sim(
+            args.replicas, requests, kw["policy"],
+            utilization=args.utilization, classes=CHAOS_WORKLOAD,
+            slots=args.slots, service=service, prefill_chunk=256,
+            admission="cache_aware", prefix_cache_tokens=64 * 1024,
+            chaos=chaos, arrival=arrival, autoscale=kw["autoscale"],
+            seed=args.seed)
+        wall = time.perf_counter() - t0
+        s = tel.summary()
+        s["wall_seconds"] = wall
+        results["runs"][name] = s
+        ch, auto = s["chaos"], s["autoscale"]
+        print(f"{name:18s} wall={wall:5.1f}s "
+              f"p99_under_failure={ch['p99_under_failure_s']:7.3f}s "
+              f"recovery={ch['recovery_mean_s']:6.3f}s "
+              f"replayed={ch['requests_replayed']:4d} "
+              f"peak={auto['replicas_peak']}", flush=True)
+
     p99_fifo = results["runs"]["fifo"]["per_class"]["0.0"]["p99_s"]
     p99_strat = results["runs"]["strategy"]["per_class"]["0.0"]["p99_s"]
     p99_chunk = results["runs"]["strategy+chunked"]["per_class"]["0.0"]["p99_s"]
@@ -222,6 +314,34 @@ def main(argv=None) -> int:
         "spec_acceptance_rate": spec_accept,
         "spec_beats_baseline": bool(spec_speedup >= args.min_spec_speedup),
     }
+    ch_static = results["runs"]["chaos_static"]["chaos"]
+    ch_auto = results["runs"]["chaos_autoscale"]["chaos"]
+    ch_cost = results["runs"]["chaos_costmodel"]["chaos"]
+    p99uf_static = ch_static["p99_under_failure_s"]
+    p99uf_auto = ch_auto["p99_under_failure_s"]
+    p99uf_cost = ch_cost["p99_under_failure_s"]
+    chaos_speedup = p99uf_static / p99uf_auto if p99uf_auto \
+        else float("inf")
+    chaos_finished = all(
+        results["runs"][n]["finished"] == requests
+        for n in ("chaos_static", "chaos_autoscale", "chaos_costmodel"))
+    recovery_ok = (ch_auto["recovery_mean_s"]
+                   <= 1.05 * ch_static["recovery_mean_s"]
+                   and ch_auto["requests_replayed"] > 0)
+    results["headline"].update({
+        "chaos_p99_under_failure_static_s": p99uf_static,
+        "chaos_p99_under_failure_autoscale_s": p99uf_auto,
+        "chaos_p99_under_failure_costmodel_s": p99uf_cost,
+        "chaos_autoscale_speedup_p99_under_failure": chaos_speedup,
+        "chaos_recovery_mean_static_s": ch_static["recovery_mean_s"],
+        "chaos_recovery_mean_autoscale_s": ch_auto["recovery_mean_s"],
+        "chaos_replayed_static": ch_static["requests_replayed"],
+        "chaos_replayed_autoscale": ch_auto["requests_replayed"],
+        "chaos_replayed_costmodel": ch_cost["requests_replayed"],
+        "chaos_all_finished": bool(chaos_finished),
+        "chaos_autoscale_beats_static": bool(
+            chaos_speedup >= args.min_chaos_speedup and recovery_ok),
+    })
     print(f"\nheavy-tail prompts: chunked+strategy p99={p99_chunk:.3f}s vs "
           f"FIFO p99={p99_fifo:.3f}s — {speedup:.2f}x")
     print(f"shared-prefix traffic: cache on p99={p99_on:.3f}s vs off "
@@ -230,6 +350,9 @@ def main(argv=None) -> int:
     print(f"greedy-friendly traffic: spec on {spec_tok_on:.1f} tok/s vs "
           f"off {spec_tok_off:.1f} tok/s — {spec_speedup:.2f}x "
           f"(acceptance={spec_accept:.3f})")
+    print(f"chaos: autoscale p99-under-failure={p99uf_auto:.3f}s vs static "
+          f"{p99uf_static:.3f}s — {chaos_speedup:.2f}x (cost_model "
+          f"{p99uf_cost:.3f}s, all_finished={chaos_finished})")
 
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
@@ -258,6 +381,27 @@ def main(argv=None) -> int:
     elif args.assert_spec_wins:
         print(f"OK: speculative decode {spec_speedup:.2f}x >= "
               f"{args.min_spec_speedup:.2f}x baseline decode tokens/s")
+    if args.assert_chaos_wins:
+        if not chaos_finished:
+            print("FAIL: a chaos variant lost requests (crash replay or "
+                  "drain is broken)", file=sys.stderr)
+            rc = 1
+        if chaos_speedup < args.min_chaos_speedup:
+            print(f"FAIL: autoscaling only {chaos_speedup:.2f}x static "
+                  f"p99-under-failure (need >= "
+                  f"{args.min_chaos_speedup:.2f}x)", file=sys.stderr)
+            rc = 1
+        if not recovery_ok:
+            print(f"FAIL: autoscale recovery "
+                  f"{ch_auto['recovery_mean_s']:.3f}s worse than static "
+                  f"{ch_static['recovery_mean_s']:.3f}s (or no replays "
+                  f"happened)", file=sys.stderr)
+            rc = 1
+        if rc == 0:
+            print(f"OK: chaos — all finished, autoscale "
+                  f"{chaos_speedup:.2f}x static p99-under-failure, "
+                  f"recovery {ch_auto['recovery_mean_s']:.3f}s vs "
+                  f"{ch_static['recovery_mean_s']:.3f}s")
     return rc
 
 

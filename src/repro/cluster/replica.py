@@ -30,6 +30,17 @@ class Replica:
     def __init__(self, replica_id: int, place: Optional[int] = None):
         self.replica_id = replica_id
         self.place = replica_id if place is None else place
+        #: fail-stop flag: a dead replica drops everything in flight; the
+        #: router replays its displaced requests elsewhere
+        self.dead = False
+        #: graceful scale-down: a draining replica takes no new work and
+        #: leaves the fleet when its queue and slots empty
+        self.draining = False
+
+    def fail(self) -> None:
+        """Fail-stop.  In simulation this drops pending completion events;
+        a live wrapper stops stepping the engine."""
+        self.dead = True
 
     # -- work accounting -----------------------------------------------------
     def backlog_weight(self) -> int:
@@ -57,6 +68,17 @@ class Replica:
         ``req`` — the cache-affinity placement signal.  0 = cold replica
         (the default for replicas without a prefix cache)."""
         return 0
+
+    def concurrency(self) -> int:
+        """Decode slots this replica runs concurrently — the service-rate
+        denominator the cost-model placement divides estimated work by."""
+        return 1
+
+    def speed_hint(self) -> float:
+        """Relative service speed (1.0 = nominal).  Simulated replicas
+        report their modeled speed; live fleets get measured speeds from
+        the ``StragglerDetector`` instead, which overrides this hint."""
+        return 1.0
 
     # -- request flow --------------------------------------------------------
     def submit(self, req: Request, tokens: Optional[Any] = None,
@@ -119,8 +141,12 @@ class EngineReplica(Replica):
     def free_slots(self) -> int:
         return sum(1 for r in self.engine.slot_req if r is None)
 
+    def concurrency(self) -> int:
+        return len(self.engine.slot_req)
+
     def wants_work(self) -> bool:
-        return self.waiting_count() == 0 and self.free_slots() > 0
+        return (not self.dead and not self.draining
+                and self.waiting_count() == 0 and self.free_slots() > 0)
 
     def prefix_match(self, req: Request,
                      tokens: Optional[Any] = None) -> int:
@@ -137,9 +163,16 @@ class EngineReplica(Replica):
         self.engine.submit_request(req, tokens, migrated=migrated)
 
     def steal_waiting(self, target_weight: int) -> List[StolenItem]:
+        # a killed engine cannot answer a steal RPC: between the kill and
+        # the heartbeat declaring it dead, steals yield nothing and its
+        # work waits for the crash-replay path
+        if self.dead:
+            return []
         return self.engine.export_waiting(target_weight=target_weight)
 
     def steal_waiting_count(self, n: int) -> List[StolenItem]:
+        if self.dead:
+            return []
         return self.engine.export_waiting(count=n)
 
     def take_spec(self, rid: int) -> Optional[Tuple[int, int]]:
@@ -163,6 +196,10 @@ class EngineReplica(Replica):
 
     # -- engine loop ---------------------------------------------------------
     def step(self) -> int:
+        # a killed engine stops responding: no steps, no heartbeats — the
+        # router's HeartbeatMonitor declares it dead after the timeout
+        if self.dead:
+            return 0
         return self.engine.step()
 
     def drained(self) -> bool:

@@ -29,13 +29,15 @@ from ..core.device.request_scheduler import (ContinuousBatcher, Request,
                                              RequestState)
 from ..core.machine import MachineModel
 from ..core.strategy import MergePolicy
+from ..runtime.elastic import AutoscalePolicy, Autoscaler
+from .chaos import ArrivalPattern, ChaosSchedule
 from .replica import Replica, StolenItem
 from .router import ClusterRouter, StealPolicy
 from .telemetry import ClusterTelemetry
 
 __all__ = ["SimClock", "ServiceModel", "SimReplica", "Simulation",
            "ClassSpec", "default_workload", "synthetic_requests",
-           "run_cluster_sim"]
+           "offered_rate", "run_cluster_sim"]
 
 
 class SimClock:
@@ -135,6 +137,10 @@ class SimReplica(Replica):
         self.clock = clock
         self.service = service or ServiceModel()
         self.slots = slots
+        #: service-rate multiplier (1.0 = nominal, < 1 = straggling);
+        #: chaos slowdown events set it, the router's speed-aware victim
+        #: ranking reads it back through ``speed_hint``
+        self.speed = 1.0
         self.batcher = ContinuousBatcher(max_batch=slots, now=clock.now,
                                          merge_policy=merge_policy,
                                          prefill_chunk=prefill_chunk,
@@ -167,7 +173,21 @@ class SimReplica(Replica):
         return self.active
 
     def wants_work(self) -> bool:
-        return self.active < self.slots and self.batcher.waiting_count == 0
+        return (not self.dead and not self.draining
+                and self.active < self.slots
+                and self.batcher.waiting_count == 0)
+
+    def concurrency(self) -> int:
+        return self.slots
+
+    def speed_hint(self) -> float:
+        return self.speed
+
+    def set_speed(self, speed: float) -> None:
+        """Chaos slowdown/restore.  Only affects work dispatched from now
+        on — requests already in a slot keep their scheduled completion
+        (the model's granularity; a finer model would re-plan them)."""
+        self.speed = max(speed, 1e-6)
 
     def prefix_match(self, req: Request, tokens=None) -> int:
         if not self.prefix_cache_tokens or req.prefix_group is None:
@@ -226,6 +246,8 @@ class SimReplica(Replica):
         """Fill free slots in strategy-priority order; schedule completions.
         With chunked prefill, a mid-prompt request occupies the slot for one
         chunk's service time only."""
+        if self.dead:
+            return
         while self.active < self.slots:
             req = self.batcher.pop_next_waiting()
             if req is None:
@@ -239,20 +261,26 @@ class SimReplica(Replica):
                 self.batcher.mark_running(req)
                 req.state = RequestState.PREFILL
                 self.active += 1
-                self.sim.after(chunk / self.service.prefill_rate,
-                               self._chunk_done, req, chunk)
+                self.sim.after(
+                    chunk / (self.service.prefill_rate * self.speed),
+                    self._chunk_done, req, chunk)
                 continue
             self.batcher.mark_running(req)
             now = self.clock.now()
-            req.first_token_at = now + self.service.prefill_time(req)
+            req.first_token_at = now + \
+                self.service.prefill_time(req) / self.speed
             self.active += 1
-            self.sim.after(self.service.service_time(req),
+            self.sim.after(self.service.service_time(req) / self.speed,
                            self._complete, req)
 
     def _chunk_done(self, req: Request, chunk: int) -> None:
         """A non-final prefill chunk finished: the request re-enters the
         waiting storage (strategy-ordered, stealable) for its remaining
         chunks — the same bookkeeping the live engine uses."""
+        if self.dead or req.state is not RequestState.PREFILL:
+            # crashed mid-chunk (event outlived the replica, or the
+            # request was already replayed elsewhere): drop silently
+            return
         self.active -= 1
         self.batcher.finish_running(req)
         self.batcher.complete_prefill_chunk(req, chunk)
@@ -264,6 +292,10 @@ class SimReplica(Replica):
         return self._spec.pop(rid, None)
 
     def _complete(self, req: Request) -> None:
+        if self.dead:
+            # the completion event outlived the replica: the request was
+            # displaced by the crash and replays elsewhere
+            return
         self.active -= 1
         req.prefilled = req.prompt_len
         req.generated = req.max_new_tokens
@@ -283,42 +315,134 @@ class SimReplica(Replica):
 
 
 class Simulation:
-    """heapq event calendar driving a router over ``SimReplica`` pools."""
+    """heapq event calendar driving a router over ``SimReplica`` pools.
+
+    Beyond arrivals/completions/steal ticks, the calendar can carry a
+    :class:`~repro.cluster.chaos.ChaosSchedule` (crash and slowdown
+    events) and a periodic autoscale tick that feeds the fleet's
+    cache-adjusted backlog into an :class:`~repro.runtime.elastic.
+    Autoscaler` — scale-up instantiates replicas through
+    ``replica_factory(index)``, scale-down drains the least-loaded one.
+    Periodic ticks are bookkept separately from *real* events so two
+    mutually-rescheduling tick streams cannot keep an otherwise-drained
+    calendar alive forever."""
 
     def __init__(self, router: ClusterRouter, clock: SimClock,
-                 steal_interval: Optional[float] = 0.25):
+                 steal_interval: Optional[float] = 0.25,
+                 chaos: Optional[ChaosSchedule] = None,
+                 autoscaler: Optional[Autoscaler] = None,
+                 replica_factory: Optional[Callable[[int], Replica]] = None,
+                 autoscale_interval: float = 0.5):
         self.router = router
         self.clock = clock
         self.steal_interval = steal_interval
-        self._events: List[Tuple[float, int, Callable, tuple]] = []
+        self.chaos = chaos
+        self.autoscaler = autoscaler
+        self.replica_factory = replica_factory
+        self.autoscale_interval = autoscale_interval
+        self._events: List[Tuple[float, int, Callable, tuple, bool]] = []
         self._seq = itertools.count()
+        self._real_pending = 0
+        self._chaos_scheduled = False
         for rep in router.replicas:
             if isinstance(rep, SimReplica):
                 rep.sim = self
 
+    def _push(self, t: float, fn: Callable, args: tuple,
+              tick: bool) -> None:
+        if not tick:
+            self._real_pending += 1
+        heapq.heappush(self._events, (t, next(self._seq), fn, args, tick))
+
     def at(self, t: float, fn: Callable, *args) -> None:
-        heapq.heappush(self._events, (t, next(self._seq), fn, args))
+        self._push(t, fn, args, False)
 
     def after(self, dt: float, fn: Callable, *args) -> None:
         self.at(self.clock.t + dt, fn, *args)
+
+    def _tick_after(self, dt: float, fn: Callable) -> None:
+        self._push(self.clock.t + dt, fn, (), True)
+
+    def _live(self) -> bool:
+        """Work remains: real events pending or requests outstanding."""
+        return self._real_pending > 0 or bool(self.router.outstanding)
 
     def _steal_tick(self) -> None:
         self.router.steal_tick()
         for rep in self.router.replicas:
             if isinstance(rep, SimReplica):
                 rep.dispatch()
-        if self._events and self.steal_interval:
-            self.after(self.steal_interval, self._steal_tick)
+        if self.steal_interval and self._live():
+            self._tick_after(self.steal_interval, self._steal_tick)
+
+    # -- chaos + autoscale ---------------------------------------------------
+    def add_replica(self) -> int:
+        rep = self.replica_factory(len(self.router.replicas))
+        if isinstance(rep, SimReplica):
+            rep.sim = self
+        return self.router.add_replica(rep)
+
+    def _crash(self, idx: int) -> None:
+        self.router.fail_replica(idx)
+
+    def _slow(self, idx: int, factor: float) -> None:
+        rep = self.router.replicas[idx]
+        if rep.dead or not isinstance(rep, SimReplica):
+            return
+        rep.set_speed(factor)
+        self.router.telemetry.record_slowdown(idx, self.clock.t, factor)
+
+    def _unslow(self, idx: int) -> None:
+        rep = self.router.replicas[idx]
+        if not rep.dead and isinstance(rep, SimReplica):
+            rep.set_speed(1.0)
+
+    def _autoscale_tick(self) -> None:
+        r = self.router
+        alive = r.placeable
+        if alive:
+            backlog = sum(r.replicas[i].backlog_weight() for i in alive)
+            delta = self.autoscaler.observe(self.clock.t, len(alive),
+                                            backlog)
+            if delta > 0 and self.replica_factory is not None:
+                for _ in range(delta):
+                    self.add_replica()
+                r.telemetry.record_scale(self.clock.t, delta,
+                                         len(r.placeable))
+                r.steal_tick()          # new replicas pull work now
+            elif delta < 0:
+                victim = min(alive, key=lambda i: (
+                    r.replicas[i].backlog_weight(), i))
+                if r.retire_replica(victim):
+                    r.telemetry.record_scale(self.clock.t, -1,
+                                             len(r.placeable))
+        r._check_retired()
+        if self.autoscale_interval and self._live():
+            self._tick_after(self.autoscale_interval, self._autoscale_tick)
+
+    def _schedule_chaos(self) -> None:
+        for ev in self.chaos.crashes:
+            self.at(ev.t, self._crash, ev.replica)
+        for ev in self.chaos.slowdowns:
+            self.at(ev.t, self._slow, ev.replica, ev.factor)
+            self.at(ev.t + ev.duration, self._unslow, ev.replica)
 
     def run(self, until: Optional[float] = None) -> float:
+        if self.chaos is not None and not self._chaos_scheduled:
+            self._chaos_scheduled = True
+            self._schedule_chaos()
         if self.steal_interval:
-            self.after(self.steal_interval, self._steal_tick)
+            self._tick_after(self.steal_interval, self._steal_tick)
+        if self.autoscaler is not None and self.autoscale_interval:
+            self._tick_after(self.autoscale_interval, self._autoscale_tick)
         while self._events:
             item = heapq.heappop(self._events)
-            t, _, fn, args = item
+            t, _, fn, args, tick = item
             if until is not None and t > until:
                 heapq.heappush(self._events, item)   # keep it for resume
                 break
+            if not tick:
+                self._real_pending -= 1
             self.clock.t = t
             fn(*args)
         return self.clock.t
@@ -389,13 +513,31 @@ def default_workload(size_dist: str = "exponential",
 
 def synthetic_requests(num_requests: int, arrival_rate: float,
                        classes: Sequence[ClassSpec],
-                       seed: int = 0):
+                       seed: int = 0,
+                       pattern: Optional[ArrivalPattern] = None):
     """Poisson arrivals over a mix of SLO classes.  Returns a list of
     ``(arrival_time, make_request)``; ``make_request(now)`` builds the
-    Request stamped with sim time."""
+    Request stamped with sim time.
+
+    ``pattern`` makes the process non-homogeneous (diurnal sinusoid,
+    flash crowds): arrivals are drawn at the pattern's peak rate and
+    thinned by ``multiplier(t) / peak`` — the standard exact sampler for
+    a non-homogeneous Poisson process, and seed-deterministic because
+    both the gaps and the acceptance draws come from one seeded
+    generator."""
     rng = np.random.default_rng(seed)
-    gaps = rng.exponential(1.0 / arrival_rate, num_requests)
-    arrivals = np.cumsum(gaps)
+    if pattern is None:
+        gaps = rng.exponential(1.0 / arrival_rate, num_requests)
+        arrivals = np.cumsum(gaps)
+    else:
+        peak = pattern.peak
+        accepted: List[float] = []
+        t = 0.0
+        while len(accepted) < num_requests:
+            t += rng.exponential(1.0 / (arrival_rate * peak))
+            if rng.random() * peak <= pattern.multiplier(t):
+                accepted.append(t)
+        arrivals = np.asarray(accepted, np.float64)
     shares = np.asarray([c.share for c in classes], np.float64)
     which = rng.choice(len(classes), num_requests, p=shares / shares.sum())
     prompts = np.empty(num_requests, np.int64)
@@ -441,6 +583,20 @@ def synthetic_requests(num_requests: int, arrival_rate: float,
     return out
 
 
+def offered_rate(num_replicas: int, slots: int, utilization: float,
+                 classes: Sequence[ClassSpec],
+                 service: ServiceModel) -> float:
+    """Arrival rate hitting target ``utilization`` on the *initial* fleet:
+    ``lambda = rho * total_slots / mean_service_time``.  Exposed so chaos
+    benchmarks can convert request counts into expected run duration and
+    schedule faults at meaningful fractions of it."""
+    shares = np.asarray([c.share for c in classes], np.float64)
+    shares /= shares.sum()
+    mean_service = float(sum(
+        s * c.mean_service(service) for s, c in zip(shares, classes)))
+    return utilization * num_replicas * slots / mean_service
+
+
 def run_cluster_sim(num_replicas: int, num_requests: int,
                     policy: StealPolicy, *,
                     utilization: float = 0.85,
@@ -457,34 +613,48 @@ def run_cluster_sim(num_replicas: int, num_requests: int,
                     prefix_cache_tokens: int = 0,
                     spec_k: int = 0,
                     spec_accept: float = 0.8,
+                    chaos: Optional[ChaosSchedule] = None,
+                    arrival: Optional[ArrivalPattern] = None,
+                    autoscale: Optional[AutoscalePolicy] = None,
+                    autoscale_interval: float = 0.5,
                     seed: int = 0) -> ClusterTelemetry:
     """Build a simulated cluster, push a synthetic workload through the
     shared router policy code, return the telemetry.  ``spec_k > 0``
     switches every replica to speculative decoding at that depth
-    (acceptance ``spec_accept`` unless the workload's classes override)."""
+    (acceptance ``spec_accept`` unless the workload's classes override).
+
+    Chaos hardening: ``chaos`` injects crash/slowdown events, ``arrival``
+    makes arrivals non-stationary (diurnal + flash crowds), and
+    ``autoscale`` turns on telemetry-driven elastic scaling — scale-up
+    replicas are built by the same recipe as the initial fleet.  The whole
+    run is seed-deterministic: same arguments, same seed → identical
+    telemetry, event trace included."""
     service = service or ServiceModel(spec_k=spec_k, spec_accept=spec_accept)
     classes = tuple(classes) if classes is not None else \
         default_workload(size_dist=size_dist, pareto_alpha=pareto_alpha)
     clock = SimClock()
-    replicas = [SimReplica(i, clock, service, slots=slots,
-                           merge_policy=merge_policy,
-                           prefill_chunk=prefill_chunk,
-                           admission=admission,
-                           prefix_cache_tokens=prefix_cache_tokens)
-                for i in range(num_replicas)]
+
+    def make_replica(i: int) -> SimReplica:
+        return SimReplica(i, clock, service, slots=slots,
+                          merge_policy=merge_policy,
+                          prefill_chunk=prefill_chunk,
+                          admission=admission,
+                          prefix_cache_tokens=prefix_cache_tokens)
+
+    replicas = [make_replica(i) for i in range(num_replicas)]
     telemetry = ClusterTelemetry(num_replicas)
     router = ClusterRouter(replicas, machine=machine, policy=policy,
                            telemetry=telemetry, now=clock.now, seed=seed)
-    sim = Simulation(router, clock, steal_interval=steal_interval)
+    sim = Simulation(router, clock, steal_interval=steal_interval,
+                     chaos=chaos,
+                     autoscaler=(Autoscaler(autoscale)
+                                 if autoscale is not None else None),
+                     replica_factory=make_replica,
+                     autoscale_interval=autoscale_interval)
 
-    # offered load: lambda = rho * total_slots / mean_service_time
-    shares = np.asarray([c.share for c in classes], np.float64)
-    shares /= shares.sum()
-    mean_service = float(sum(
-        s * c.mean_service(service) for s, c in zip(shares, classes)))
-    rate = utilization * num_replicas * slots / mean_service
+    rate = offered_rate(num_replicas, slots, utilization, classes, service)
     workload = synthetic_requests(num_requests, rate, classes,
-                                  seed=seed + 1)
+                                  seed=seed + 1, pattern=arrival)
 
     def arrive(make) -> None:
         req = make(clock.now())

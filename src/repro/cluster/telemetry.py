@@ -20,7 +20,7 @@ JSON-serializable and is what ``benchmarks/cluster_scale.py`` writes out.
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -125,6 +125,30 @@ class ClusterTelemetry:
         self._seen: set = set()
         self._migrated: set = set()
         self._spec_seen: set = set()
+        # -- chaos / recovery --------------------------------------------
+        self.crashes = 0
+        self.slowdowns = 0
+        self.requests_replayed = 0
+        #: per-crash recovery times: a crash opens a failure window over
+        #: its displaced (origin, rid) set; the window closes — and the
+        #: recovery time is recorded — when every displaced request has
+        #: reached a terminal outcome (finished, cancelled or rejected)
+        self._recoveries: List[float] = []
+        self._active_failures: Dict[int, Tuple[float, set]] = {}
+        self._crash_id = 0
+        #: latency of every request that completes while at least one
+        #: failure window is open — the p99-under-failure population
+        self.under_failure = LatencyHistogram()
+        # -- autoscale ----------------------------------------------------
+        self.scale_ups = 0
+        self.scale_downs = 0
+        self.replicas_added = 0
+        self.replicas_retired = 0
+        self.replicas_peak = num_replicas
+        self.alive_replicas = num_replicas   # maintained by the router
+        #: membership event trace (crash/slowdown/scale), time-ordered —
+        #: the seed-determinism test compares this verbatim
+        self.events: List[dict] = []
 
     # -- recording -----------------------------------------------------------
     def _hist(self, table: Dict[float, LatencyHistogram],
@@ -145,6 +169,8 @@ class ClusterTelemetry:
             return
         self._seen.add(key)
         self._hist(self.per_class, req.priority).record(now - req.arrival)
+        if self._active_failures:
+            self.under_failure.record(now - req.arrival)
         if req.first_token_at is not None:
             self._hist(self.ttft, req.priority).record(
                 req.first_token_at - req.arrival)
@@ -154,27 +180,34 @@ class ClusterTelemetry:
             st.tokens += req.generated
         if req.deadline is not None and now > req.deadline:
             self.deadline_misses += 1
+        self._note_recovered(key, now)
 
-    def record_cancelled(self, req, origin: Optional[int] = None) -> None:
+    def record_cancelled(self, req, origin: Optional[int] = None,
+                         now: Optional[float] = None) -> None:
         key = (origin, req.rid)
         if key not in self._seen:
             self._seen.add(key)
             self.cancelled += 1
+        self._note_recovered(key, now)
 
-    def record_rejected(self, req, origin: Optional[int] = None) -> None:
+    def record_rejected(self, req, origin: Optional[int] = None,
+                        now: Optional[float] = None) -> None:
         """Admission-rejected (overflow policy): never placed, never ran."""
         key = (origin, req.rid)
         if key not in self._seen:
             self._seen.add(key)
             self.rejected += 1
+        self._note_recovered(key, now)
 
-    def record_expired(self, req, origin: Optional[int] = None) -> None:
+    def record_expired(self, req, origin: Optional[int] = None,
+                       now: Optional[float] = None) -> None:
         """Deadline passed while still queued: never ran, never will."""
         key = (origin, req.rid)
         if key not in self._seen:
             self._seen.add(key)
             self.cancelled += 1
             self.deadline_misses += 1
+        self._note_recovered(key, now)
 
     def record_prefix_cache(self, replica_id: Optional[int],
                             hit_tokens: int, miss_tokens: int) -> None:
@@ -223,6 +256,78 @@ class ClusterTelemetry:
     def spec_acceptance_rate(self) -> float:
         return self.spec_accepted_tokens / self.spec_drafted_tokens \
             if self.spec_drafted_tokens else 0.0
+
+    # -- chaos / membership --------------------------------------------------
+    def _note_recovered(self, key, now: Optional[float]) -> None:
+        """Terminal outcome for ``key``: shrink every open failure window
+        holding it; an emptied window records its recovery time."""
+        if not self._active_failures:
+            return
+        closed = []
+        for cid, (t0, keys) in self._active_failures.items():
+            keys.discard(key)
+            if not keys:
+                self._recoveries.append((now - t0) if now is not None
+                                        else 0.0)
+                closed.append(cid)
+        for cid in closed:
+            del self._active_failures[cid]
+
+    def record_crash(self, replica_id: int, now: float,
+                     displaced: Sequence) -> None:
+        """A replica died at ``now`` with ``displaced`` (origin, rid) keys
+        in flight.  Opens a failure window tracked until every displaced
+        request reaches a terminal outcome."""
+        self.crashes += 1
+        keys = set(displaced)
+        self.events.append({"t": now, "kind": "crash",
+                            "replica": replica_id,
+                            "displaced": len(keys)})
+        if keys:
+            self._active_failures[self._crash_id] = (now, keys)
+            self._crash_id += 1
+
+    def record_replay(self, req, origin: Optional[int] = None) -> None:
+        self.requests_replayed += 1
+
+    def record_slowdown(self, replica_id: int, now: float,
+                        factor: float) -> None:
+        self.slowdowns += 1
+        self.events.append({"t": now, "kind": "slowdown",
+                            "replica": replica_id, "factor": factor})
+
+    def record_scale(self, now: float, delta: int,
+                     alive_after: int) -> None:
+        """An autoscale decision was applied: ``delta`` replicas added
+        (positive) or one sent draining (negative)."""
+        if delta > 0:
+            self.scale_ups += 1
+            self.replicas_added += delta
+        elif delta < 0:
+            self.scale_downs += 1
+        self.events.append({"t": now, "kind": "scale", "delta": delta,
+                            "alive": alive_after})
+
+    def record_retired(self, replica_id: int, now: float) -> None:
+        """A draining replica emptied and left the fleet."""
+        self.replicas_retired += 1
+        self.events.append({"t": now, "kind": "retired",
+                            "replica": replica_id})
+
+    def add_replica(self) -> int:
+        """The fleet grew: open a stats slot for the new replica."""
+        self.replicas.append(_ReplicaStats())
+        return len(self.replicas) - 1
+
+    def note_alive(self, n: int) -> None:
+        """Router callback on any membership change: ``n`` replicas are
+        currently alive (placeable or draining)."""
+        self.alive_replicas = n
+        self.replicas_peak = max(self.replicas_peak, n)
+
+    @property
+    def recovery_times(self) -> List[float]:
+        return list(self._recoveries)
 
     def record_steal(self, src: int, dst: int, requests: int,
                      weight: int,
@@ -293,6 +398,28 @@ class ClusterTelemetry:
                     "max": self._spec_rate_max,
                 },
             },
+            "chaos": {
+                "crashes": self.crashes,
+                "slowdowns": self.slowdowns,
+                "requests_replayed": self.requests_replayed,
+                "recoveries": len(self._recoveries),
+                "recovery_mean_s": (sum(self._recoveries)
+                                    / len(self._recoveries)
+                                    if self._recoveries else 0.0),
+                "recovery_max_s": (max(self._recoveries)
+                                   if self._recoveries else 0.0),
+                "p99_under_failure_s": self.under_failure.percentile(99),
+                "finished_under_failure": self.under_failure.total,
+            },
+            "autoscale": {
+                "scale_ups": self.scale_ups,
+                "scale_downs": self.scale_downs,
+                "replicas_added": self.replicas_added,
+                "replicas_retired": self.replicas_retired,
+                "replicas_peak": self.replicas_peak,
+                "replicas_final": self.alive_replicas,
+            },
+            "events": list(self.events),
             "per_class": {str(k): self.class_percentiles(k)
                           for k in sorted(self.per_class)},
             "ttft_per_class": {

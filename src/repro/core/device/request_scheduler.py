@@ -116,6 +116,21 @@ class Request:
         if self.state not in (RequestState.DONE,):
             self.state = RequestState.CANCELLED
 
+    def reset_for_replay(self) -> None:
+        """Crash recovery: the owning replica died holding this request's
+        KV blocks and any undelivered tokens, so progress rewinds to a
+        cold start.  The ``arrival`` stamp survives — latency keeps
+        counting across the crash — and the replacement replica's prefix
+        cache is re-probed at re-admission, so a published prefix chain is
+        re-adopted and only the uncached remainder re-prefills."""
+        self.state = RequestState.WAITING
+        self.prefilled = 0
+        self.generated = 0
+        self.cached_prefix = 0
+        self.first_token_at = None
+        self.finished_at = None
+        self.spec_k = 0
+
 
 class RequestStrategy(PriorityStrategy):
     """SLO-class / deadline / arrival priority; dead when cancelled or past

@@ -14,12 +14,19 @@ CI equality gate (paged and contiguous KV must generate identical tokens):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
         --requests 8 --check-paged-equality
+
+Chaos smoke (kill one live engine mid-run; exit 1 unless every request
+finishes and replayed counts match telemetry — see docs/operations.md):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --replicas 2 --requests 12 --chaos kill-one
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import time
+from collections import Counter
 
 import jax
 import numpy as np
@@ -29,6 +36,8 @@ from ..cluster import (ClusterRouter, ClusterTelemetry, EngineReplica,
 from ..configs import get_config, scale_down
 from ..core.device.request_scheduler import Request
 from ..models import build_model
+from ..runtime import (Autoscaler, AutoscalePolicy, HeartbeatMonitor,
+                       StragglerDetector)
 from ..serving import ServingEngine, Speculator
 
 
@@ -249,15 +258,33 @@ def _check_paged_equality(args, model, params, cfg, draft=None) -> int:
     return 0
 
 
-def _serve_cluster(args, model, params, cfg, draft=None) -> None:
-    replicas = [
-        EngineReplica(i, ServingEngine(model, params,
-                                       speculator=_make_spec(args, draft),
-                                       **_engine_kw(args)))
-        for i in range(args.replicas)]
+def _serve_cluster(args, model, params, cfg, draft=None) -> int:
+    def make_engine():
+        return ServingEngine(model, params,
+                             speculator=_make_spec(args, draft),
+                             **_engine_kw(args))
+
+    chaotic = args.chaos is not None or args.autoscale
+    replicas = [EngineReplica(i, make_engine())
+                for i in range(args.replicas)]
     policy = StealPolicy(amount=args.steal, placement=args.placement)
+    # Chaos/autoscale runs get liveness + speed tracking: a killed engine
+    # stops responding, the heartbeat declares it dead, and the router
+    # replays its in-flight requests elsewhere (docs/operations.md).
+    heartbeat = (HeartbeatMonitor(timeout_s=args.heartbeat_timeout)
+                 if chaotic else None)
+    straggler = (StragglerDetector(num_hosts=args.replicas)
+                 if chaotic else None)
     router = ClusterRouter(replicas, policy=policy,
-                           telemetry=ClusterTelemetry(args.replicas))
+                           telemetry=ClusterTelemetry(args.replicas),
+                           heartbeat=heartbeat, straggler=straggler)
+    autoscaler = None
+    if args.autoscale:
+        ceiling = args.max_replicas or 2 * args.replicas
+        autoscaler = Autoscaler(AutoscalePolicy(
+            min_replicas=args.replicas, max_replicas=ceiling,
+            target_backlog=args.autoscale_target,
+            up_ticks=2, down_ticks=8, cooldown_s=0.5))
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
     reqs = []
@@ -268,24 +295,127 @@ def _serve_cluster(args, model, params, cfg, draft=None) -> None:
                       priority=float(i % 3))
         router.submit(req, tokens=prompt)
         reqs.append(req)
-    router.run_until_drained()
+    submitted = [r for r in reqs if r.state.name != "CANCELLED"]
+
+    if not chaotic:
+        router.run_until_drained()
+    else:
+        tel = router.telemetry
+        kill_after = max(1, len(submitted) // 4)
+        killed = None
+        for step in range(200_000):
+            router.step()
+            if (args.chaos == "kill-one" and killed is None
+                    and tel.finished >= kill_after and router.outstanding):
+                # Kill the engine that owns the most in-flight work so the
+                # crash actually displaces something worth replaying.
+                owners = Counter(o for o in router._owner.values()
+                                 if o in router.placeable)
+                if owners:
+                    killed = owners.most_common(1)[0][0]
+                    router.replicas[killed].dead = True
+                    print(f"[chaos] killed replica {killed} after "
+                          f"{tel.finished} finishes "
+                          f"({owners[killed]} requests in flight on it)")
+            if autoscaler is not None and step % 4 == 0:
+                alive = router.placeable
+                backlog = sum(router.replicas[i].backlog_weight()
+                              for i in alive)
+                delta = autoscaler.observe(time.monotonic(), len(alive),
+                                           backlog)
+                if delta > 0:
+                    for _ in range(delta):
+                        idx = router.add_replica(
+                            EngineReplica(len(router.replicas),
+                                          make_engine()))
+                        print(f"[autoscale] added replica {idx}")
+                    tel.record_scale(time.perf_counter() - t0, delta,
+                                     len(router.placeable))
+                    router.steal_tick()
+                elif delta < 0:
+                    victim = min(alive,
+                                 key=lambda i:
+                                 (router.replicas[i].backlog_weight(), i))
+                    if router.retire_replica(victim):
+                        tel.record_scale(time.perf_counter() - t0, -1,
+                                         len(router.placeable))
+                        print(f"[autoscale] retiring replica {victim}")
+            if router.drained():
+                break
+        else:
+            print("FAIL: cluster did not drain within step budget",
+                  file=sys.stderr)
+            return 1
+
     dt = time.perf_counter() - t0
     done = sum(1 for r in reqs if r.state.name == "DONE")
     toks = sum(r.generated for r in reqs)
     print(f"completed {done}/{len(reqs)} requests, {toks} tokens in "
           f"{dt:.2f}s ({toks / dt:.1f} tok/s) on {args.replicas} replicas")
-    print(router.telemetry.report())
-    spec = router.telemetry.summary()["spec"]
+    tel = router.telemetry
+    print(tel.report())
+    summary = tel.summary()
+    spec = summary["spec"]
     if spec["drafted_tokens"]:
         print(f"speculative: drafted={spec['drafted_tokens']} "
               f"accepted={spec['accepted_tokens']} "
               f"acceptance={spec['acceptance_rate']:.2f} "
               f"requests={spec['requests']}")
+    if chaotic:
+        ch, auto = summary["chaos"], summary["autoscale"]
+        print(f"chaos: crashes={ch['crashes']} "
+              f"replayed={ch['requests_replayed']} "
+              f"recoveries={ch['recoveries']} "
+              f"recovery_mean={ch['recovery_mean_s']:.3f}s "
+              f"p99_under_failure={ch['p99_under_failure_s']:.3f}s")
+        print(f"autoscale: ups={auto['scale_ups']} "
+              f"downs={auto['scale_downs']} peak={auto['replicas_peak']} "
+              f"final={auto['replicas_final']}")
     for h in router.health():
+        if h.get("dead"):
+            print(f"  replica {h['replica_id']}: dead")
+            continue
         print(f"  replica {h['replica_id']}: backlog={h['backlog_weight']} "
               f"waiting={h['waiting']} active={h['active']}"
               + (f" free_kv={h['free_kv_tokens']}"
                  if "free_kv_tokens" in h else ""))
+
+    # Chaos acceptance gates: every request reaches a terminal state with
+    # nothing silently lost, replayed counts match what telemetry recorded
+    # at each crash, and per-SLO-class telemetry accounts for every finish.
+    if chaotic:
+        ok = True
+        if done != len(submitted):
+            print(f"FAIL: {len(submitted) - done} submitted requests did "
+                  f"not finish", file=sys.stderr)
+            ok = False
+        if args.chaos == "kill-one":
+            if killed is None:
+                print("FAIL: chaos kill never triggered", file=sys.stderr)
+                ok = False
+            displaced = sum(e.get("displaced", 0) for e in summary["events"]
+                            if e["kind"] == "crash")
+            replayed = summary["chaos"]["requests_replayed"]
+            if replayed != displaced:
+                print(f"FAIL: telemetry replay mismatch: replayed="
+                      f"{replayed} displaced-at-crash={displaced}",
+                      file=sys.stderr)
+                ok = False
+            if killed is not None and displaced == 0:
+                print("FAIL: crash displaced no requests", file=sys.stderr)
+                ok = False
+        want = Counter(r.priority for r in reqs if r.state.name == "DONE")
+        for prio, n in sorted(want.items()):
+            got = summary["per_class"].get(str(prio), {}).get("count", 0)
+            if got != n:
+                print(f"FAIL: SLO class {prio}: telemetry counted {got} "
+                      f"finishes, engines report {n}", file=sys.stderr)
+                ok = False
+        if ok:
+            print(f"OK: chaos/autoscale smoke — {done}/{len(submitted)} "
+                  f"finished, replay bookkeeping consistent")
+        return 0 if ok else 1
+    return 0
 
 
 def main() -> int:
@@ -300,7 +430,26 @@ def main() -> int:
                     choices=["half_work", "half_count", "none"])
     ap.add_argument("--placement", default="round_robin",
                     choices=["round_robin", "random", "least_of_d",
-                             "least_work", "slo_aware", "cache_affinity"])
+                             "least_work", "slo_aware", "cache_affinity",
+                             "cost_model"])
+    ap.add_argument("--chaos", default=None, choices=["kill-one"],
+                    help="fault injection: kill-one marks the busiest "
+                         "engine dead mid-run; the heartbeat declares it, "
+                         "its requests replay elsewhere, and the run exits "
+                         "1 unless every request finishes with consistent "
+                         "replay telemetry")
+    ap.add_argument("--heartbeat-timeout", type=float, default=2.0,
+                    help="seconds without a step response before a replica "
+                         "is declared dead (chaos/autoscale cluster runs)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="scale the live fleet from telemetry backlog "
+                         "(queue depth weighted by cache-hit-adjusted "
+                         "remaining work); --replicas is the floor")
+    ap.add_argument("--max-replicas", type=int, default=None,
+                    help="autoscale ceiling (default: 2x --replicas)")
+    ap.add_argument("--autoscale-target", type=float, default=256.0,
+                    help="backlog weight per replica the autoscaler aims "
+                         "to hold (token-units of remaining work)")
     # Paged KV: the default "auto" pages every family with a paged decode
     # path (dense/MoE/VLM/hybrid) and falls back to the dense per-slot
     # cache elsewhere (SSM, enc-dec).
@@ -372,9 +521,8 @@ def main() -> int:
     if args.check_paged_equality:
         return _check_paged_equality(args, model, params, cfg, draft)
     if args.replicas > 1:
-        _serve_cluster(args, model, params, cfg, draft)
-    else:
-        _serve_single(args, model, params, cfg, draft)
+        return _serve_cluster(args, model, params, cfg, draft)
+    _serve_single(args, model, params, cfg, draft)
     return 0
 
 

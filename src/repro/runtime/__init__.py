@@ -1,6 +1,8 @@
 from .fault_tolerance import (HeartbeatMonitor, SimulatedFailure,
                               StragglerDetector, TrainSupervisor)
-from .elastic import propose_mesh_shape, reshard_plan
+from .elastic import (Autoscaler, AutoscalePolicy, propose_mesh_shape,
+                      reshard_plan)
 
 __all__ = ["HeartbeatMonitor", "StragglerDetector", "TrainSupervisor",
-           "SimulatedFailure", "propose_mesh_shape", "reshard_plan"]
+           "SimulatedFailure", "Autoscaler", "AutoscalePolicy",
+           "propose_mesh_shape", "reshard_plan"]

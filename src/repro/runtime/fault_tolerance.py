@@ -68,6 +68,27 @@ class StragglerDetector:
             self.ewma[host] = (self.alpha * duration_s
                                + (1 - self.alpha) * self.ewma[host])
 
+    def grow(self, n: int = 1) -> None:
+        """Autoscaled fleets add hosts mid-run; new hosts start unseen so
+        they do not distort the median until they report steps."""
+        if n <= 0:
+            return
+        self.num_hosts += n
+        self.ewma = np.concatenate([self.ewma, np.zeros(n)])
+        self.seen = np.concatenate([self.seen, np.zeros(n, bool)])
+
+    def relative_speed(self, host: int) -> float:
+        """Measured speed of ``host`` relative to the median host
+        (1.0 = typical, < 1 = straggling).  Unseen hosts report 1.0 —
+        the router's speed-aware victim ranking and cost-model placement
+        treat them as typical until evidence arrives."""
+        if not self.seen[host] or self.ewma[host] <= 0:
+            return 1.0
+        med = float(np.median(self.ewma[self.seen]))
+        if med <= 0:
+            return 1.0
+        return med / float(self.ewma[host])
+
     def stragglers(self) -> List[int]:
         if not self.seen.all():
             return []

@@ -269,6 +269,13 @@ class ServingEngine:
         req.max_new_tokens = self._fit_or_raise(
             len(tokens), req.max_new_tokens, can_reject=not migrated,
             generated=req.generated)
+        if req.state is not RequestState.WAITING:
+            # crash replay: the previous owner died mid-flight and the
+            # router re-placed the request here.  Admission needs a clean
+            # WAITING entry; any prefill/decode progress claimed by the
+            # dead engine is gone (the rewind itself happens in
+            # Request.reset_for_replay — this is the engine-side guard)
+            req.state = RequestState.WAITING
         self.prompts[req.rid] = np.asarray(tokens, np.int32)
         self.outputs[req.rid] = outputs or self.outputs.get(req.rid, [])
         if req.prefilled > 0:
@@ -276,7 +283,10 @@ class ServingEngine:
                 pass                        # prefix KV adopted into our pool
             else:
                 req.prefilled = 0           # recompute the prefix
-        # cache affinity does not travel: re-probe against OUR pool
+        # cache affinity does not travel (and did not survive a crash):
+        # re-probe against OUR pool — a prefix chain published here by
+        # earlier shared-prefix traffic is re-adopted at prefill, so a
+        # replayed request re-prefills only the uncached remainder
         req.cached_prefix = 0
         self._probe_prefix(req, tokens)
         self.batcher.submit(req)

@@ -1,0 +1,278 @@
+"""Chaos hardening: crash replay, telemetry dedup across replica death,
+elastic autoscaling, straggler-aware stealing, cost-model placement, and
+non-stationary arrival patterns — all on the discrete-event simulator."""
+import json
+
+import pytest
+
+from repro.cluster import (ArrivalPattern, ChaosSchedule, ClusterRouter,
+                           ClusterTelemetry, CrashEvent, FlashCrowd,
+                           SimClock, SimReplica, SlowdownEvent, StealPolicy,
+                           offered_rate, run_cluster_sim)
+from repro.cluster.sim import ServiceModel, default_workload, \
+    synthetic_requests
+from repro.core.device.request_scheduler import Request
+from repro.runtime import AutoscalePolicy
+
+
+def _pool(n, slots=4, **policy_kw):
+    clock = SimClock()
+    replicas = [SimReplica(i, clock, slots=slots) for i in range(n)]
+    router = ClusterRouter(replicas, policy=StealPolicy(**policy_kw),
+                           telemetry=ClusterTelemetry(n), now=clock.now,
+                           seed=0)
+    return router, replicas
+
+
+def _track(router, rep_idx, req):
+    """Register a directly-submitted request in the router's books (the
+    pattern the router-level steal tests use)."""
+    router.replicas[rep_idx].submit(req)
+    router.outstanding[req.rid] = req
+    router._owner[req.rid] = rep_idx
+    router._origin[req.rid] = rep_idx
+
+
+def _horizon(replicas, requests, utilization=0.8, slots=4):
+    rate = offered_rate(replicas, slots, utilization, default_workload(),
+                        ServiceModel())
+    return requests / rate
+
+
+# ----------------------------------------------------------- fault schedule
+def test_chaos_schedule_random_is_seeded_and_valid():
+    a = ChaosSchedule.random(16, 100.0, crashes=4, slowdowns=3, seed=5)
+    b = ChaosSchedule.random(16, 100.0, crashes=4, slowdowns=3, seed=5)
+    assert a == b                                   # deterministic per seed
+    assert len(a.crashes) == 4 and len(a.slowdowns) == 3
+    victims = [ev.replica for ev in a.crashes]
+    assert len(set(victims)) == len(victims)        # distinct victims
+    for ev in list(a.crashes) + list(a.slowdowns):
+        assert 20.0 <= ev.t <= 80.0                 # middle band of the run
+    times = [ev.t for ev in a.crashes]
+    assert times == sorted(times)
+
+
+def test_slowdown_event_rejects_nonpositive_factor():
+    with pytest.raises(ValueError):
+        SlowdownEvent(t=1.0, replica=0, factor=0.0)
+
+
+def test_arrival_pattern_multiplier_and_peak():
+    pat = ArrivalPattern(diurnal_amplitude=0.5, diurnal_period=100.0,
+                         flash_crowds=(FlashCrowd(start=10.0, duration=5.0,
+                                                  multiplier=3.0),))
+    assert pat.multiplier(25.0) == pytest.approx(1.5)   # diurnal crest
+    assert pat.multiplier(12.0) == pytest.approx(
+        3.0 * (1.0 + 0.5 * __import__("math").sin(
+            2.0 * __import__("math").pi * 12.0 / 100.0)))
+    assert pat.multiplier(20.0) < 1.5                   # crowd over
+    assert pat.peak == pytest.approx(4.5)               # (1+amp) * crowd
+
+
+def test_flash_crowd_densifies_arrivals():
+    pat = ArrivalPattern(flash_crowds=(FlashCrowd(start=50.0, duration=20.0,
+                                                  multiplier=5.0),))
+    arrivals = synthetic_requests(2000, 10.0, default_workload(), seed=4,
+                                  pattern=pat)
+    times = [t for t, _make in arrivals]
+    in_crowd = sum(1 for t in times if 50.0 <= t < 70.0)
+    control = sum(1 for t in times if 100.0 <= t < 120.0)
+    assert control > 0 and in_crowd / control > 2.0
+    again = synthetic_requests(2000, 10.0, default_workload(), seed=4,
+                               pattern=pat)
+    assert [t for t, _make in again] == times           # seeded thinning
+
+
+# ------------------------------------------------------------- crash replay
+def test_crash_replay_finishes_every_request():
+    horizon = _horizon(6, 500)
+    chaos = ChaosSchedule(crashes=(CrashEvent(t=0.3 * horizon, replica=0),
+                                   CrashEvent(t=0.5 * horizon, replica=3)))
+    tel = run_cluster_sim(6, 500, StealPolicy(amount="half_work"),
+                          utilization=0.8, chaos=chaos, seed=3)
+    s = tel.summary()
+    assert tel.finished == 500                  # nothing lost to the crashes
+    assert s["chaos"]["crashes"] == 2
+    assert s["chaos"]["requests_replayed"] > 0
+    assert s["chaos"]["recoveries"] >= 1
+    assert s["chaos"]["recovery_mean_s"] > 0
+    assert s["chaos"]["p99_under_failure_s"] > 0
+    assert s["autoscale"]["replicas_final"] == 4    # two tombstones
+
+
+def test_migration_dedupe_survives_victim_death():
+    """Regression (double-count bug): a request stolen r0→r1, whose new
+    owner r1 then crashes, keeps its ORIGINAL (origin=0, rid) dedup stamp
+    through replay — a second steal of the replayed request must not bump
+    requests_migrated again."""
+    router, reps = _pool(3, amount="half_work", victim="max_loaded")
+    reqs = [Request(prompt_len=s, max_new_tokens=10)
+            for s in (100, 10, 10)]
+    for req in reqs:
+        _track(router, 0, req)
+    target = reqs[0]                            # heaviest: moves first
+    router.steal_for(1)
+    assert router._owner[target.rid] == 1
+    base = router.telemetry.requests_migrated
+    assert base >= 1
+    assert (0, target.rid) in router.telemetry._migrated
+
+    displaced = router.fail_replica(1)
+    assert target in displaced
+    assert router.telemetry.crashes == 1
+    owner = router._owner[target.rid]
+    assert owner in (0, 2)                      # replayed onto a survivor
+    assert router._origin[target.rid] == 0      # origin stamp preserved
+    assert router.telemetry.requests_replayed == len(displaced)
+
+    thief = 2 if owner == 0 else 0
+    if thief == 0:                              # keep the thief's queue clear
+        for extra in reqs[1:]:
+            if router._owner.get(extra.rid) == 0:
+                router._owner[extra.rid] = -1   # untrack the noise
+    router.steal_for(thief)
+    assert router._owner[target.rid] == thief   # it moved again...
+    assert router.telemetry.requests_migrated == base   # ...but deduped
+
+
+def test_failed_replica_leaves_placement_and_victim_sets():
+    router, reps = _pool(3, amount="half_work", victim="max_loaded")
+    router.fail_replica(1)
+    assert router.placeable == [0, 2]
+    assert router.alive_count() == 2
+    for _ in range(6):
+        idx = router.submit(Request(prompt_len=10, max_new_tokens=10))
+        assert idx != 1
+    health = router.health()
+    assert health[1] == {"replica_id": 1, "place": reps[1].place,
+                         "dead": True}
+
+
+def test_dead_engine_cannot_be_stolen_from():
+    router, reps = _pool(2, amount="half_work", victim="max_loaded")
+    for req in [Request(prompt_len=100, max_new_tokens=10)
+                for _ in range(4)]:
+        _track(router, 0, req)
+    reps[0].dead = True          # killed but not yet declared by heartbeat
+    assert router.steal_for(1) == 0
+    assert reps[1].waiting_count() == 0
+
+
+# ------------------------------------------------------- graceful scale-down
+def test_retire_replica_migrates_queue_and_tombstones():
+    router, reps = _pool(2, amount="half_work")
+    for req in [Request(prompt_len=50, max_new_tokens=10)
+                for _ in range(3)]:
+        _track(router, 0, req)
+    assert router.retire_replica(0)
+    assert reps[1].waiting_count() == 3         # queue moved wholesale
+    assert router.placeable == [1]
+    router._check_retired()                     # r0 now empty → leaves
+    assert router.telemetry.replicas_retired == 1
+    assert router.alive_count() == 1
+    assert not router.retire_replica(1)         # never the last replica
+
+
+# ------------------------------------------------------- straggler handling
+def test_steal_victim_ranking_is_speed_adjusted():
+    """A slowed replica's backlog costs more wall-clock per token, so it
+    outranks a nominally heavier healthy victim."""
+    router, reps = _pool(3, amount="half_work", victim="max_loaded")
+    for req in [Request(prompt_len=100, max_new_tokens=10)
+                for _ in range(2)]:
+        _track(router, 0, req)                  # healthy, weight ~220
+    for req in [Request(prompt_len=80, max_new_tokens=10)
+                for _ in range(2)]:
+        _track(router, 1, req)                  # slowed, weight ~180
+    reps[1].set_speed(0.25)                     # 180/0.25 ≫ 220/1.0
+    router.steal_for(2)
+    assert router.telemetry.replicas[1].steals_out == 1
+    assert router.telemetry.replicas[0].steals_out == 0
+
+
+def test_sim_slowdown_schedule_recovers():
+    horizon = _horizon(4, 300)
+    chaos = ChaosSchedule(slowdowns=(
+        SlowdownEvent(t=0.3 * horizon, replica=0, factor=0.2,
+                      duration=0.2 * horizon),))
+    tel = run_cluster_sim(4, 300, StealPolicy(amount="half_work"),
+                          utilization=0.8, chaos=chaos, seed=6)
+    assert tel.finished == 300
+    assert tel.summary()["chaos"]["slowdowns"] == 1
+
+
+# --------------------------------------------------------- cost-model place
+def test_cost_model_placement_picks_fastest_finish():
+    router, reps = _pool(3, placement="cost_model", probe=3)
+    for req in [Request(prompt_len=200, max_new_tokens=10)
+                for _ in range(3)]:
+        _track(router, 0, req)                  # backlogged
+    reps[2].set_speed(0.05)                     # idle but crawling
+    req = Request(prompt_len=50, max_new_tokens=10)
+    assert router.place(req) == 1               # idle AND fast wins
+
+
+# ------------------------------------------------------------- autoscaling
+def test_autoscale_absorbs_flash_crowd():
+    horizon = _horizon(4, 800, utilization=0.7)
+    arrival = ArrivalPattern(flash_crowds=(
+        FlashCrowd(start=0.4 * horizon, duration=0.2 * horizon,
+                   multiplier=3.0),))
+    policy = AutoscalePolicy(min_replicas=4, max_replicas=10,
+                             target_backlog=2048.0, up_ticks=2,
+                             down_ticks=8, cooldown_s=1.0)
+    tel = run_cluster_sim(4, 800, StealPolicy(amount="half_work"),
+                          utilization=0.7, arrival=arrival,
+                          autoscale=policy, seed=2)
+    s = tel.summary()
+    assert tel.finished == 800
+    assert s["autoscale"]["scale_ups"] >= 1
+    assert s["autoscale"]["replicas_peak"] > 4
+    assert s["autoscale"]["replicas_final"] >= 4    # floor respected
+    kinds = {e["kind"] for e in s["events"]}
+    assert "scale" in kinds
+
+
+def test_seed_determinism_under_full_chaos():
+    """Same args + same seed → byte-identical telemetry, events included —
+    crashes, slowdowns, flash crowds and autoscaling are all drawn from
+    seeded streams and simulated time only."""
+    horizon = _horizon(4, 400)
+    kw = dict(
+        utilization=0.8,
+        chaos=ChaosSchedule(
+            crashes=(CrashEvent(t=0.35 * horizon, replica=1),),
+            slowdowns=(SlowdownEvent(t=0.5 * horizon, replica=2,
+                                     factor=0.25,
+                                     duration=0.1 * horizon),)),
+        arrival=ArrivalPattern(diurnal_amplitude=0.3,
+                               diurnal_period=horizon),
+        autoscale=AutoscalePolicy(min_replicas=4, max_replicas=8,
+                                  target_backlog=2048.0),
+        seed=11)
+    a = run_cluster_sim(4, 400, StealPolicy(amount="half_work"), **kw)
+    b = run_cluster_sim(4, 400, StealPolicy(amount="half_work"), **kw)
+    assert json.dumps(a.summary(), sort_keys=True) == \
+        json.dumps(b.summary(), sort_keys=True)
+
+
+def test_crash_during_flash_crowd_with_autoscale_finishes_all():
+    """The acceptance scenario in miniature: crashes inside the flash
+    crowd, elastic fleet, every request still terminates."""
+    horizon = _horizon(4, 600, utilization=0.7)
+    chaos = ChaosSchedule(crashes=(
+        CrashEvent(t=0.45 * horizon, replica=0),
+        CrashEvent(t=0.5 * horizon, replica=2)))
+    arrival = ArrivalPattern(flash_crowds=(
+        FlashCrowd(start=0.4 * horizon, duration=0.2 * horizon,
+                   multiplier=2.5),))
+    policy = AutoscalePolicy(min_replicas=4, max_replicas=12,
+                             target_backlog=2048.0)
+    tel = run_cluster_sim(4, 600, StealPolicy(amount="half_work"),
+                          utilization=0.7, chaos=chaos, arrival=arrival,
+                          autoscale=policy, seed=9)
+    s = tel.summary()
+    assert tel.finished == 600
+    assert s["chaos"]["crashes"] == 2
+    assert s["chaos"]["p99_under_failure_s"] >= 0

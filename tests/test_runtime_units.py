@@ -1,0 +1,114 @@
+"""Unit tests for the elastic/fault-tolerance runtime pieces the chaos
+stack leans on: autoscaler hysteresis and the straggler detector's
+relative-speed signal.  (Heartbeat, supervisor and mesh-shape coverage
+lives in test_checkpoint_runtime.py.)"""
+import pytest
+
+from repro.runtime import AutoscalePolicy, Autoscaler, StragglerDetector
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        AutoscalePolicy(min_replicas=0)
+    with pytest.raises(ValueError):
+        AutoscalePolicy(min_replicas=4, max_replicas=2)
+    with pytest.raises(ValueError):
+        AutoscalePolicy(target_backlog=0.0)
+    with pytest.raises(ValueError):
+        AutoscalePolicy(up_ticks=0)
+
+
+def _scaler(**kw):
+    base = dict(min_replicas=1, max_replicas=8, target_backlog=100.0,
+                up_ticks=2, down_ticks=3, cooldown_s=10.0, max_step_up=2)
+    base.update(kw)
+    return Autoscaler(AutoscalePolicy(**base))
+
+
+def test_desired_is_proportional_and_clamped():
+    a = _scaler()
+    assert a.desired(0.0) == 1            # floor
+    assert a.desired(250.0) == 3          # ceil(250/100)
+    assert a.desired(1e9) == 8            # ceiling
+
+
+def test_scale_up_needs_consecutive_ticks():
+    a = _scaler()
+    assert a.observe(0.0, alive=2, backlog_weight=1000.0) == 0  # 1st tick
+    delta = a.observe(1.0, alive=2, backlog_weight=1000.0)      # 2nd tick
+    assert delta == 2                     # want 8, capped by max_step_up
+
+
+def test_one_cold_tick_resets_the_hot_streak():
+    a = _scaler()
+    assert a.observe(0.0, 2, 1000.0) == 0
+    assert a.observe(1.0, 2, 200.0) == 0  # want == alive: streak broken
+    assert a.observe(2.0, 2, 1000.0) == 0  # needs two hot ticks again
+    assert a.observe(3.0, 2, 1000.0) == 2
+
+
+def test_cooldown_blocks_back_to_back_actions():
+    a = _scaler()
+    a.observe(0.0, 2, 1000.0)
+    assert a.observe(1.0, 2, 1000.0) == 2          # action at t=1
+    assert a.observe(2.0, 4, 1000.0) == 0          # in cooldown
+    assert a.observe(3.0, 4, 1000.0) == 0
+    assert a.observe(12.0, 4, 1000.0) == 2         # cooldown over, 2 ticks
+    # counter was reset by the action, so the t=12 grant needed the t=2/t=3
+    # observations to have rebuilt the streak — which they did
+
+
+def test_scale_down_is_slow_and_single_step():
+    a = _scaler(cooldown_s=0.0)
+    for t in range(2):
+        assert a.observe(float(t), alive=4, backlog_weight=0.0) == 0
+    assert a.observe(2.0, alive=4, backlog_weight=0.0) == -1   # 3rd tick
+    # streak reset: the next decision needs another three cold ticks
+    assert a.observe(3.0, alive=3, backlog_weight=0.0) == 0
+
+
+def test_never_scales_below_min_or_above_max():
+    a = _scaler(cooldown_s=0.0)
+    for t in range(10):
+        assert a.observe(float(t), alive=1, backlog_weight=0.0) == 0
+    b = _scaler(cooldown_s=0.0, max_step_up=8)
+    b.observe(0.0, 7, 1e9)
+    assert b.observe(1.0, 7, 1e9) == 1             # capped at max_replicas
+    for t in range(2, 10):
+        assert b.observe(float(t), 8, 1e9) == 0    # already at ceiling
+
+
+def test_equilibrium_holds_fleet_steady():
+    a = _scaler(cooldown_s=0.0)
+    for t in range(20):
+        assert a.observe(float(t), alive=4,
+                         backlog_weight=4 * 100.0) == 0
+
+
+# ------------------------------------------------------- straggler detector
+def test_relative_speed_tracks_ewma_ratio():
+    d = StragglerDetector(num_hosts=3, alpha=1.0)
+    for _ in range(3):
+        d.record_step(0, 0.1)
+        d.record_step(1, 0.1)
+        d.record_step(2, 0.4)
+    assert d.relative_speed(0) == pytest.approx(1.0)   # at the median
+    assert d.relative_speed(2) == pytest.approx(0.25)  # 4x slower
+    assert d.relative_speed(2) < d.relative_speed(0)
+
+
+def test_relative_speed_defaults_to_one_when_unseen():
+    d = StragglerDetector(num_hosts=2)
+    assert d.relative_speed(1) == 1.0
+
+
+def test_grow_extends_host_arrays():
+    d = StragglerDetector(num_hosts=2)
+    d.record_step(0, 0.1)
+    d.grow(2)
+    assert d.num_hosts == 4
+    assert d.relative_speed(3) == 1.0          # new host: unseen
+    d.record_step(3, 0.2)                      # and recordable
+    assert d.seen[3]
+    d.grow(0)                                  # no-op
+    assert d.num_hosts == 4
