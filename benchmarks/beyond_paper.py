@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .common import PLACES, SCALE, emit, timed
+from .common import SCALE, emit, timed
 
 
 def moe_dispatch_quality() -> None:
@@ -26,9 +26,10 @@ def moe_dispatch_quality() -> None:
                 ("arrival", "arrival", False),
                 ("priority", "priority", False),
                 ("priority+resteal", "priority", True)):
-            fn = lambda: priority_dispatch(eidx, gate, probs, num_experts=e,
-                                           capacity=cap, policy=policy,
-                                           resteal=resteal)
+            def fn(policy=policy, resteal=resteal):
+                return priority_dispatch(eidx, gate, probs, num_experts=e,
+                                         capacity=cap, policy=policy,
+                                         resteal=resteal)
             plan, dt = timed(lambda: jax.block_until_ready(fn()), repeats=2)
             kept = total - float(plan.dropped_mass)
             rows[name] = kept
@@ -92,11 +93,8 @@ def kernel_microbench() -> None:
     from repro.kernels.prefix_scan.ops import prefix_scan
     from repro.kernels.prefix_scan.ref import prefix_scan_ref
     from repro.kernels.flash_attention.ops import flash_attention
-    from repro.kernels.flash_attention.ref import mha_ref
     from repro.kernels.moe_gmm.ops import grouped_swiglu
-    from repro.kernels.moe_gmm.ref import grouped_swiglu_ref
     from repro.kernels.wkv6.ops import wkv6
-    from repro.kernels.wkv6.ref import wkv6_ref
 
     x = jnp.arange(1 << 14, dtype=jnp.int32).reshape(4, -1)
     _, dt_k = timed(lambda: jax.block_until_ready(prefix_scan(x)), repeats=2)

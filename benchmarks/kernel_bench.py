@@ -59,10 +59,12 @@ def bench_flash(shapes, repeats):
         got, dt_p = _time(lambda *a: flash_attention(
             *a, causal=causal, window=window, bq=32, bk=32),
             q, k, v, repeats=repeats)
-        ref_fn = lambda q_, k_, v_: jnp.moveaxis(
-            mha_ref(jnp.moveaxis(q_, 2, 1), jnp.moveaxis(k_, 2, 1),
-                    jnp.moveaxis(v_, 2, 1), causal=causal, window=window),
-            1, 2)
+        def ref_fn(q_, k_, v_):
+            return jnp.moveaxis(
+                mha_ref(jnp.moveaxis(q_, 2, 1), jnp.moveaxis(k_, 2, 1),
+                        jnp.moveaxis(v_, 2, 1), causal=causal,
+                        window=window),
+                1, 2)
         want, dt_r = _time(jax.jit(ref_fn), q, k, v, repeats=repeats)
         rows.append({
             "shape": f"b{b} s{s} t{t} h{h}/{hkv} d{d} "

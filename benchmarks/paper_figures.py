@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.apps import (bipartition, prefix_sum, quicksort, sssp, tristrip,
                         uts)
-from repro.core import SchedulerConfig, StrategyScheduler, spawn_s
+from repro.core import SchedulerConfig, StrategyScheduler
 
 from .common import PLACES, SCALE, emit
 

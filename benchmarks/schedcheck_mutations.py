@@ -1,0 +1,379 @@
+"""Mutation harness: prove schedcheck has teeth (CI gate).
+
+A verifier that has never seen a bug is indistinguishable from one that
+cannot see bugs.  This harness seeds known fault classes — comparator-law
+violations, key-shape drift, steal-protocol off-by-ones, conservation
+skews — into throwaway copies of the strategy zoo and the task storages,
+runs the matching schedcheck layer (``schedlint``, the interleaving
+explorer, or the ``check()`` invariants) and asserts every fault is
+caught.  The unmutated baseline must stay clean, so a detector that just
+always fires also fails the harness.
+
+Fault classes (each a ``@mutation``; the detector column is what must
+catch it):
+
+====================  =====================================  ============
+fault                 seeded bug                             detector
+====================  =====================================  ============
+comparator_cycle      non-transitive prioritize (RPS cycle)  schedlint
+comparator_reflexive  instance orders before itself          schedlint
+comparator_asym       both of a<b and b<a true               schedlint
+comparator_raises     prioritize throws on a legal pair      schedlint
+key_shape_clash       scalar vs tuple priority in a cohort   schedlint
+key_arity_drift       2-tuple vs 3-tuple keys in a cohort    schedlint
+steal_class_invert    lower steal_class stolen last          schedlint
+weight_nonpositive    transitive_weight clamp removed        schedlint
+merge_chunk_overrun   chunk_size off-by-one past remaining   schedlint
+merge_dead_resurrect  chunk ignores its dead representative  schedlint
+steal_skips_claim     steal returns a task it never claimed  explorer
+steal_overdrain       steal flips state bypassing the claim  explorer
+pop_refcount_skew     pop claims without counter decrement   explorer
+push_skips_log        push hides the task from stealers      explorer
+compact_resurrects    compaction re-marks claimed as READY   explorer
+deque_drops_task      deque pop discards a second entry      explorer
+router_lost_request   fail_replica forgets a displaced req   router check
+====================  =====================================  ============
+
+Run::
+
+    PYTHONPATH=src python benchmarks/schedcheck_mutations.py \
+        [--assert-all-caught] [--list] [--only FAULT]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.analysis.interleave import default_schedule, explore
+from repro.analysis.schedlint import (Cohort, lint_classes, lint_cohort,
+                                      lint_merge_policy, lint_merging,
+                                      run_lint)
+from repro.analysis.invariants import soft_check
+from repro.core.strategy import (MergePolicy, MergingStrategy,
+                                 PriorityStrategy)
+from repro.core.task import TaskState
+from repro.core.task_storage import DequeTaskStorage, StrategyTaskStorage
+
+#: name -> (fn, detector label); fn returns the evidence strings that
+#: prove detection (empty = fault escaped).
+MUTATIONS: Dict[str, Tuple[Callable[[], List[str]], str]] = {}
+
+
+def mutation(detector: str):
+    def deco(fn: Callable[[], List[str]]):
+        MUTATIONS[fn.__name__] = (fn, detector)
+        return fn
+    return deco
+
+
+def _errors(findings, *rules: str) -> List[str]:
+    return [f.render() for f in findings
+            if (not rules or f.rule in rules)]
+
+
+# --------------------------------------------------------------------------
+# schedlint-detected faults
+# --------------------------------------------------------------------------
+
+@mutation("schedlint")
+def comparator_cycle() -> List[str]:
+    """Rock-paper-scissors ordering: transitivity (SL103) must fire."""
+    class CycleStrategy(PriorityStrategy):
+        def prioritize(self, other):
+            if isinstance(other, CycleStrategy):
+                return (self.priority, other.priority) in \
+                    {(0.0, 1.0), (1.0, 2.5), (2.5, 0.0)}
+            return super().prioritize(other)
+    return _errors(lint_classes([CycleStrategy]), "SL103")
+
+
+@mutation("schedlint")
+def comparator_reflexive() -> List[str]:
+    class ReflexiveStrategy(PriorityStrategy):
+        def prioritize(self, other):
+            return self.priority <= other.priority     # <= : reflexive
+    return _errors(lint_classes([ReflexiveStrategy]), "SL101", "SL102")
+
+
+@mutation("schedlint")
+def comparator_asym() -> List[str]:
+    class LoudStrategy(PriorityStrategy):
+        def prioritize(self, other):
+            return self.priority != other.priority     # both claim first
+    return _errors(lint_classes([LoudStrategy]), "SL102")
+
+
+@mutation("schedlint")
+def comparator_raises() -> List[str]:
+    class BrittleStrategy(PriorityStrategy):
+        def steal_prioritize(self, other):
+            raise RuntimeError("comparator exploded")
+    return _errors(lint_classes([BrittleStrategy]), "SL110")
+
+
+@mutation("schedlint")
+def key_shape_clash() -> List[str]:
+    """Scalar priority co-resident with tuple priority: SL130 (a mixed
+    heap op raises TypeError at runtime)."""
+    class TupleKeyed(PriorityStrategy):
+        def __init__(self, priority, **kw):
+            super().__init__(priority=(float(priority), 0.0), **kw)
+    cohort = Cohort("mutated", [PriorityStrategy, TupleKeyed])
+    return _errors(lint_cohort(cohort), "SL130", "SL120", "SL121")
+
+
+@mutation("schedlint")
+def key_arity_drift() -> List[str]:
+    """The spec-vs-request contract with a drifted arity: SL131."""
+    from repro.core.device.request_scheduler import RequestStrategy
+
+    class ShortKeyStrategy(RequestStrategy):
+        @staticmethod
+        def _key(request):
+            return (request.priority, request.arrival)      # dropped field
+    cohort = Cohort("mutated", [RequestStrategy, ShortKeyStrategy])
+    return _errors(lint_cohort(cohort), "SL131")
+
+
+@mutation("schedlint")
+def steal_class_invert() -> List[str]:
+    """Cross-type steal order is decided by the LCA class's comparator, so
+    the inversion is seeded there: a shared spec base whose steal order
+    contradicts the declared ``steal_class`` ranking."""
+    from repro.serving.speculative import (DraftStrategy, SpecStrategy,
+                                           VerifyStrategy)
+
+    class InvertedSpec(SpecStrategy):
+        def steal_prioritize(self, other):
+            if isinstance(other, SpecStrategy) \
+                    and self.steal_class != other.steal_class:
+                return self.steal_class > other.steal_class  # inverted
+            return super().steal_prioritize(other)
+
+    class BadDraft(DraftStrategy, InvertedSpec):
+        pass
+
+    class BadVerify(VerifyStrategy, InvertedSpec):
+        pass
+
+    cohort = Cohort("mutated", [BadDraft, BadVerify])
+    return _errors(lint_cohort(cohort), "SL140", "SL121")
+
+
+@mutation("schedlint")
+def weight_nonpositive() -> List[str]:
+    class WeightlessStrategy(PriorityStrategy):
+        def __init__(self, priority, transitive_weight=1, **kw):
+            super().__init__(priority, **kw)
+            self.transitive_weight = 0          # bypasses the clamp
+
+        def set_transitive_weight(self, w):
+            self.transitive_weight = int(w)     # no clamp either
+    return _errors(lint_classes([WeightlessStrategy]), "SL150")
+
+
+@mutation("schedlint")
+def merge_chunk_overrun() -> List[str]:
+    class OffByOnePolicy(MergePolicy):
+        def chunk_size(self, queue_depth, remaining):
+            return super().chunk_size(queue_depth, remaining) + 1
+    return _errors(lint_merge_policy(OffByOnePolicy()), "SL160")
+
+
+@mutation("schedlint")
+def merge_dead_resurrect() -> List[str]:
+    class ZombieChunk(MergingStrategy):
+        def is_dead(self):
+            return False                 # ignores the dead representative
+    return _errors(lint_merging(ZombieChunk), "SL170")
+
+
+# --------------------------------------------------------------------------
+# explorer-detected faults (storage protocol)
+# --------------------------------------------------------------------------
+
+def _explore(factory) -> List[str]:
+    res = explore(default_schedule(), factory, max_states=50_000,
+                  max_ops=2_000_000)
+    return [v.render() for v in res.violations]
+
+
+@mutation("explorer")
+def steal_skips_claim() -> List[str]:
+    """Steal hands out the head task without claiming it: the owner can
+    deliver it again — double delivery."""
+    class LeakyStealStorage(StrategyTaskStorage):
+        def steal_batch(self, stealer_id, **kw):
+            with self._lock:
+                for t in self._log:
+                    if self._resident(t) and not t.strategy.is_dead():
+                        return [t], t.strategy.transitive_weight
+            return [], 0
+    return _explore(lambda: LeakyStealStorage(0))
+
+
+@mutation("explorer")
+def steal_overdrain() -> List[str]:
+    """Off-by-one steal transaction: one extra task leaves the queue with
+    its state flipped by hand instead of via ``_claim`` — the ready
+    counter no longer matches the resident scan."""
+    class OverdrainStorage(StrategyTaskStorage):
+        def steal_batch(self, stealer_id, **kw):
+            stolen, weight = super().steal_batch(stealer_id, **kw)
+            with self._lock:
+                for t in self._log:
+                    if self._resident(t):
+                        t.state = TaskState.CLAIMED   # bypasses _claim
+                        stolen.append(t)
+                        break
+            return stolen, weight
+    return _explore(lambda: OverdrainStorage(0))
+
+
+@mutation("explorer")
+def pop_refcount_skew() -> List[str]:
+    class SkewedStorage(StrategyTaskStorage):
+        def _claim(self, task):
+            task.state = TaskState.CLAIMED
+            self.executed_total += 1      # forgets _ready/_ready_weight
+    return _explore(lambda: SkewedStorage(0))
+
+
+@mutation("explorer")
+def push_skips_log() -> List[str]:
+    """Push that never appends to the push log: the task is invisible to
+    every stealer — a lost task in waiting."""
+    class HiddenPushStorage(StrategyTaskStorage):
+        def push(self, task):
+            super().push(task)
+            with self._lock:
+                self._log.pop()
+                self._log_seq.pop()
+    return _explore(lambda: HiddenPushStorage(0))
+
+
+@mutation("explorer")
+def compact_resurrects() -> List[str]:
+    class ResurrectingStorage(StrategyTaskStorage):
+        def _compact(self):
+            for t in self._log:          # "recover" claimed entries
+                if t.state == TaskState.CLAIMED:
+                    t.state = TaskState.READY
+            super()._compact()
+    return _explore(lambda: ResurrectingStorage(0))
+
+
+@mutation("explorer")
+def deque_drops_task() -> List[str]:
+    class DroppyDeque(DequeTaskStorage):
+        def pop_local(self):
+            out = super().pop_local()
+            with self._lock:
+                if self._dq:
+                    self._dq.pop()        # silently loses a task
+            return out
+    return _explore(lambda: DroppyDeque(0))
+
+
+# --------------------------------------------------------------------------
+# router-conservation fault
+# --------------------------------------------------------------------------
+
+@mutation("router check")
+def router_lost_request() -> List[str]:
+    """``fail_replica`` that drops a displaced request on the floor
+    instead of replaying it: the conservation ledger must notice."""
+    from repro.cluster import (ClusterRouter, ClusterTelemetry, SimClock,
+                               SimReplica, StealPolicy)
+    from repro.core.device.request_scheduler import Request
+
+    class LossyRouter(ClusterRouter):
+        def fail_replica(self, idx):
+            reqs = super().fail_replica(idx)
+            # lose one tracked request outright: no terminal outcome, no
+            # in-flight entry — the ledger must stop balancing
+            for rid in list(self.outstanding):
+                self.outstanding.pop(rid)
+                break
+            return reqs
+
+    clock = SimClock()
+    replicas = [SimReplica(i, clock, slots=4) for i in range(2)]
+    router = LossyRouter(replicas, policy=StealPolicy(),
+                         telemetry=ClusterTelemetry(2), now=clock.now)
+    for _ in range(4):
+        router.submit(Request(prompt_len=8, max_new_tokens=4))
+    router.fail_replica(0)
+    msg = soft_check(router)
+    return [msg] if msg else []
+
+
+# --------------------------------------------------------------------------
+# harness
+# --------------------------------------------------------------------------
+
+def baseline_clean() -> List[str]:
+    """The detectors must be quiet on the unmutated zoo and storages."""
+    problems = []
+    errs = [f.render() for f in run_lint() if f.level == "error"]
+    if errs:
+        problems.append(f"schedlint errors on clean zoo: {errs}")
+    for name, factory in (("strategy", lambda: StrategyTaskStorage(0)),
+                          ("deque", lambda: DequeTaskStorage(0))):
+        res = explore(default_schedule(), factory, max_states=50_000)
+        if res.violations:
+            problems.append(f"explorer violations on clean {name} storage: "
+                            f"{[v.render() for v in res.violations]}")
+    return problems
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="schedcheck_mutations",
+        description="seed known scheduler faults; assert schedcheck "
+                    "catches them")
+    ap.add_argument("--assert-all-caught", action="store_true",
+                    help="exit non-zero unless every fault is detected "
+                         "(and the unmutated baseline is clean)")
+    ap.add_argument("--only", help="run a single fault by name")
+    ap.add_argument("--list", action="store_true", dest="list_only",
+                    help="list fault classes and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_only:
+        for name, (_, detector) in MUTATIONS.items():
+            print(f"{name:24s} {detector}")
+        return 0
+
+    selected = MUTATIONS
+    if args.only:
+        if args.only not in MUTATIONS:
+            print(f"unknown fault {args.only!r}; --list shows all",
+                  file=sys.stderr)
+            return 2
+        selected = {args.only: MUTATIONS[args.only]}
+
+    caught = escaped = 0
+    for name, (fn, detector) in selected.items():
+        evidence = fn()
+        if evidence:
+            caught += 1
+            print(f"CAUGHT  {name:24s} [{detector}] {evidence[0]}")
+        else:
+            escaped += 1
+            print(f"ESCAPED {name:24s} [{detector}] -- no finding")
+
+    base = baseline_clean() if not args.only else []
+    for p in base:
+        print(f"BASELINE NOISE: {p}")
+
+    print(f"schedcheck mutations: {caught}/{caught + escaped} caught, "
+          f"{len(base)} baseline problem(s)")
+    if args.assert_all_caught and (escaped or base):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,7 +16,7 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import numpy as np

@@ -83,7 +83,8 @@ class ClusterRouter:
                  telemetry: Optional[ClusterTelemetry] = None,
                  now: Callable[[], float] = time.monotonic,
                  seed: int = 0,
-                 heartbeat=None, straggler=None):
+                 heartbeat=None, straggler=None,
+                 debug_invariants: bool = False):
         self.replicas = list(replicas)
         self.machine = machine or flat_machine(len(self.replicas))
         if self.machine.num_places != len(self.replicas):
@@ -126,6 +127,21 @@ class ClusterRouter:
         #: placement hint; avoids probing every replica per arrival)
         self._group_home: Dict[int, int] = {}
         self._steps = 0
+        # -- conservation ledger (see check()) ---------------------------
+        #: auto-run check() after every step / poll / crash when True (the
+        #: chaos tests and the analysis layer turn this on; production
+        #: routers leave it off — the scan is O(outstanding))
+        self.debug_invariants = debug_invariants
+        #: distinct requests ever admitted into the tracked population
+        self.accepted_total = 0
+        #: terminal outcomes of tracked requests, by reason
+        self.terminal_counts: Dict[str, int] = {
+            "finished": 0, "cancelled": 0, "rejected": 0}
+        #: crash accounting: every displaced request is either replayed on
+        #: a survivor or reaches a terminal outcome during replay
+        self.displaced_total = 0
+        self.replayed_total = 0
+        self.replay_failed_total = 0
 
     # -- membership ----------------------------------------------------------
     @property
@@ -188,13 +204,17 @@ class ClusterRouter:
         # group homes pointing at the corpse would keep attracting traffic
         self._group_home = {g: h for g, h in self._group_home.items()
                             if h != idx}
+        self.displaced_total += len(displaced)
         for req in displaced:
             req.reset_for_replay()
             new_idx = self.submit(req, self._payloads.get(req.rid),
                                   _replay=True)
             if new_idx >= 0:
+                self.replayed_total += 1
                 self.telemetry.record_replay(
                     req, origin=self._origin.get(req.rid))
+        if self.debug_invariants:
+            self.check()
         return displaced
 
     def retire_replica(self, idx: int) -> bool:
@@ -346,7 +366,9 @@ class ClusterRouter:
             req.cancel()
             self.telemetry.record_cancelled(
                 req, origin=self._origin.get(req.rid), now=self.now())
-            self._drop_tracking(req.rid)
+            if _replay:
+                self.replay_failed_total += 1
+            self._drop_tracking(req.rid, reason="cancelled")
             return -1
         idx = self.place(req, home, tokens)
         try:
@@ -356,8 +378,12 @@ class ClusterRouter:
             self.telemetry.record_rejected(
                 req, origin=self._origin.get(req.rid, idx)
                 if _replay else idx, now=self.now())
-            self._drop_tracking(req.rid)
+            if _replay:
+                self.replay_failed_total += 1
+            self._drop_tracking(req.rid, reason="rejected")
             return -1
+        if req.rid not in self.outstanding:
+            self.accepted_total += 1
         self.outstanding[req.rid] = req
         self._owner[req.rid] = idx
         if not _replay:
@@ -368,11 +394,13 @@ class ClusterRouter:
             self._group_home[req.prefix_group] = idx
         return idx
 
-    def _drop_tracking(self, rid: int) -> None:
-        self.outstanding.pop(rid, None)
+    def _drop_tracking(self, rid: int, reason: Optional[str] = None) -> None:
+        tracked = self.outstanding.pop(rid, None) is not None
         self._owner.pop(rid, None)
         self._origin.pop(rid, None)
         self._payloads.pop(rid, None)
+        if tracked and reason is not None:
+            self.terminal_counts[reason] += 1
 
     # -- steal loop ----------------------------------------------------------
     def _nearest_order(self, thief_idx: int) -> List[int]:
@@ -534,21 +562,23 @@ class ClusterRouter:
                 owner = self._owner.get(rid)
                 self._record_finish(req, owner)
                 self._collect_spec(req, owner)
-                done.append(rid)
+                done.append((rid, "finished"))
             elif req.state == RequestState.CANCELLED:
                 self.telemetry.record_cancelled(
                     req, origin=self._origin.get(rid), now=now)
-                done.append(rid)
+                done.append((rid, "cancelled"))
             elif req.state == RequestState.WAITING and \
                     req.deadline is not None and now > req.deadline:
                 # expired while queued: the batcher will prune it and it
                 # will never run — stop tracking it so drains terminate
                 self.telemetry.record_expired(
                     req, origin=self._origin.get(rid), now=now)
-                done.append(rid)
-        for rid in done:
-            self._drop_tracking(rid)
+                done.append((rid, "cancelled"))
+        for rid, reason in done:
+            self._drop_tracking(rid, reason=reason)
         self._check_retired()
+        if self.debug_invariants:
+            self.check()
 
     def _record_finish(self, req: Request,
                        replica_id: Optional[int] = None) -> None:
@@ -574,8 +604,10 @@ class ClusterRouter:
         """Completion callback (the simulator pushes instead of polling)."""
         self._record_finish(req, replica_id)
         self._collect_spec(req, replica_id)
-        self._drop_tracking(req.rid)
+        self._drop_tracking(req.rid, reason="finished")
         self._check_retired()
+        if self.debug_invariants:
+            self.check()
 
     def drained(self) -> bool:
         """True when no request is outstanding and every live replica is
@@ -591,6 +623,51 @@ class ClusterRouter:
             self.step(steal_every=steal_every)
             if self.drained():
                 break
+
+    # -- invariants ----------------------------------------------------------
+    def check(self) -> None:
+        """Assert the router's request-conservation invariants (the cluster
+        analogue of ``BlockAllocator.check()``; auto-run after every
+        step/poll/crash under ``debug_invariants``):
+
+        * **population conservation** — every request ever admitted is
+          accounted to exactly one of finished, cancelled, rejected or
+          still in flight: ``accepted == finished + cancelled + rejected +
+          in_flight`` (a skew means a request was lost or double-counted);
+        * **crash-window conservation** — every request displaced by a
+          crash was either replayed onto a survivor or reached a terminal
+          outcome during replay: ``displaced == replayed + replay_failed``,
+          and the router's replay count matches telemetry's;
+        * **ownership** — every in-flight request has an owner and an
+          origin stamp, and no non-terminal request is owned by a dead
+          (tombstoned) replica.
+        """
+        t = self.terminal_counts
+        terminal = t["finished"] + t["cancelled"] + t["rejected"]
+        in_flight = len(self.outstanding)
+        assert self.accepted_total == terminal + in_flight, \
+            (f"request conservation violated: accepted "
+             f"{self.accepted_total} != finished {t['finished']} + "
+             f"cancelled {t['cancelled']} + rejected {t['rejected']} + "
+             f"in_flight {in_flight}")
+        assert self.displaced_total == (self.replayed_total
+                                        + self.replay_failed_total), \
+            (f"crash-window conservation violated: displaced "
+             f"{self.displaced_total} != replayed {self.replayed_total} + "
+             f"replay_failed {self.replay_failed_total}")
+        assert self.replayed_total == self.telemetry.requests_replayed, \
+            (f"replay accounting drifted from telemetry: "
+             f"{self.replayed_total} != "
+             f"{self.telemetry.requests_replayed}")
+        for rid, req in self.outstanding.items():
+            assert rid in self._owner, f"in-flight rid {rid} has no owner"
+            assert rid in self._origin, \
+                f"in-flight rid {rid} has no origin stamp"
+            if req.state in (RequestState.WAITING, RequestState.PREFILL,
+                             RequestState.RUNNING):
+                assert self._owner[rid] not in self._dead, \
+                    (f"non-terminal rid {rid} owned by dead replica "
+                     f"{self._owner[rid]}")
 
     # -- health --------------------------------------------------------------
     def health(self) -> List[dict]:

@@ -617,7 +617,8 @@ def run_cluster_sim(num_replicas: int, num_requests: int,
                     arrival: Optional[ArrivalPattern] = None,
                     autoscale: Optional[AutoscalePolicy] = None,
                     autoscale_interval: float = 0.5,
-                    seed: int = 0) -> ClusterTelemetry:
+                    seed: int = 0,
+                    debug_invariants: bool = False) -> ClusterTelemetry:
     """Build a simulated cluster, push a synthetic workload through the
     shared router policy code, return the telemetry.  ``spec_k > 0``
     switches every replica to speculative decoding at that depth
@@ -644,7 +645,8 @@ def run_cluster_sim(num_replicas: int, num_requests: int,
     replicas = [make_replica(i) for i in range(num_replicas)]
     telemetry = ClusterTelemetry(num_replicas)
     router = ClusterRouter(replicas, machine=machine, policy=policy,
-                           telemetry=telemetry, now=clock.now, seed=seed)
+                           telemetry=telemetry, now=clock.now, seed=seed,
+                           debug_invariants=debug_invariants)
     sim = Simulation(router, clock, steal_interval=steal_interval,
                      chaos=chaos,
                      autoscaler=(Autoscaler(autoscale)

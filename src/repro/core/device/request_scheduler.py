@@ -151,6 +151,16 @@ class RequestStrategy(PriorityStrategy):
         # tuple priorities compare lexicographically
         return (request.priority, request.deadline or np.inf, request.arrival)
 
+    @classmethod
+    def key_arity(cls) -> int:
+        """Length of this class's priority tuple, probed on a throwaway
+        request.  Strategies that may share a storage must produce
+        element-wise-comparable keys; ``serving.speculative`` asserts its
+        spec-task tuples against this at import time, and
+        ``repro.analysis.schedlint`` checks the whole cohort."""
+        probe = Request(prompt_len=1, max_new_tokens=1)
+        return len(cls._key(probe))
+
     def is_dead(self) -> bool:
         r = self.request
         if r.state == RequestState.CANCELLED:

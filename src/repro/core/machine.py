@@ -10,7 +10,7 @@ steal-from-neighbours-first victim ordering.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Sequence, Tuple
+from typing import List, Tuple
 
 
 @dataclass(frozen=True)

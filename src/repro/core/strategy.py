@@ -315,7 +315,8 @@ def steal_before(a: BaseStrategy, b: BaseStrategy) -> bool:
 # Place context (filled by the scheduler; import-cycle-free)
 # --------------------------------------------------------------------------
 
-_place_getter = lambda: None
+def _place_getter():
+    return None
 
 
 def _register_place_getter(fn) -> None:

@@ -120,6 +120,12 @@ class StrategyTaskStorage:
         self._on_prune = on_prune
         self._owner_free: List[_OwnerItem] = []
         self._steal_free: List[_StealItem] = []
+        # conservation ledger: every residency that ever entered this
+        # storage is accounted to exactly one of executed (claimed by a
+        # pop/steal/claim), pruned (dead on sight) or still-ready.
+        self.pushed_total = 0
+        self.executed_total = 0
+        self.pruned_total = 0
 
     # -- helpers (hold lock) ------------------------------------------------
     def _resident(self, task: Task) -> bool:
@@ -129,11 +135,13 @@ class StrategyTaskStorage:
         task.state = TaskState.CLAIMED
         self._ready -= 1
         self._ready_weight -= task.strategy.transitive_weight
+        self.executed_total += 1
 
     def _prune(self, task: Task) -> None:
         task.state = TaskState.DEAD
         self._ready -= 1
         self._ready_weight -= task.strategy.transitive_weight
+        self.pruned_total += 1
         if self._on_prune is not None:
             self._on_prune(task)
 
@@ -191,6 +199,7 @@ class StrategyTaskStorage:
             self._push_seq += 1
             self._ready += 1
             self._ready_weight += task.strategy.transitive_weight
+            self.pushed_total += 1
 
     def pop_local(self) -> Optional[Task]:
         with self._lock:
@@ -343,6 +352,75 @@ class StrategyTaskStorage:
             self._claim(task)
             return True
 
+    # -- invariants ------------------------------------------------------------
+    def check(self) -> None:
+        """Assert the storage's structural and conservation invariants (the
+        task-storage analogue of ``paged_kv.BlockAllocator.check()``; the
+        interleaving explorer and the hot-path tests call this after every
+        step):
+
+        * **conservation** — ``pushed == executed + dead_pruned + in_storage``:
+          every residency that ever entered is accounted to exactly one
+          outcome, so no task is lost and none is delivered twice;
+        * **counter consistency** — ``ready_count``/``ready_weight`` match a
+          full scan of the resident tasks in the owner heaps;
+        * **grouping** — every resident owner item sits in the group of its
+          strategy's concrete type (merged chunks under their
+          representative's), and the homogeneous-fast-path cache points at
+          the sole group when it is set;
+        * **push-log consistency** — the log and its sequence numbers stay
+          parallel, strictly monotone, and cover every resident task (a
+          resident a stealer could never see is a lost task in waiting);
+        * **freelist hygiene** — recycled wrappers hold no task reference.
+        """
+        with self._lock:
+            resident: Dict[int, Task] = {}
+            for t, group in self._groups.items():
+                for item in group:
+                    task = item.task
+                    assert task is not None, "owner heap holds recycled item"
+                    if self._resident(task):
+                        resident[id(task)] = task
+                        assert _group_type(task) is t, \
+                            (f"task grouped under {t.__name__} but its "
+                             f"strategy groups as "
+                             f"{_group_type(task).__name__}")
+            assert self._ready == len(resident), \
+                (f"ready_count skew: counter {self._ready} != "
+                 f"{len(resident)} resident tasks in the owner heaps")
+            weight = sum(t.strategy.transitive_weight
+                         for t in resident.values())
+            assert self._ready_weight == weight, \
+                (f"ready_weight skew: counter {self._ready_weight} != "
+                 f"{weight} summed over resident tasks")
+            assert self.pushed_total == (self.executed_total
+                                         + self.pruned_total + self._ready), \
+                (f"conservation violated: pushed {self.pushed_total} != "
+                 f"executed {self.executed_total} + pruned "
+                 f"{self.pruned_total} + in_storage {self._ready}")
+            log, seqs = self._log, self._log_seq
+            assert len(log) == len(seqs), "push log and seq nums diverged"
+            assert all(a < b for a, b in zip(seqs, seqs[1:])), \
+                "push-log sequence numbers not strictly increasing"
+            assert not seqs or seqs[-1] < self._push_seq
+            in_log = {id(t) for t in log if self._resident(t)}
+            assert set(resident) <= in_log, \
+                "resident task missing from the push log (invisible to " \
+                "stealers: a lost task in waiting)"
+            assert in_log <= set(resident), \
+                "push log holds a resident task absent from the owner " \
+                "heaps (compaction resurrected a claimed task)"
+            for view in self._views.values():
+                assert view.watermark <= self._push_seq
+            assert all(i.task is None for i in self._owner_free), \
+                "owner freelist wrapper still references a task"
+            assert all(i.task is None for i in self._steal_free), \
+                "steal freelist wrapper still references a task"
+            if self._sole_group is not None:
+                assert len(self._groups) == 1 and \
+                    self._groups.get(self._sole_type) is self._sole_group, \
+                    "homogeneous fast-path cache points at a stale group"
+
     # -- introspection ---------------------------------------------------------
     @property
     def ready_count(self) -> int:
@@ -372,6 +450,12 @@ class DequeTaskStorage:
         self._steal_half_count = steal_half_count
         self._ready = 0
         self._ready_weight = 0
+        # conservation ledger (see StrategyTaskStorage): the deque never
+        # prunes dead tasks itself, but entries whose task was claimed or
+        # killed behind its back are discounted as stale when discarded.
+        self.pushed_total = 0
+        self.executed_total = 0
+        self.stale_discarded_total = 0
 
     def _discard(self, task: Task) -> None:
         """Account for an entry leaving the deque (claimed or stale)."""
@@ -385,6 +469,7 @@ class DequeTaskStorage:
             self._dq.append(task)
             self._ready += 1
             self._ready_weight += task.strategy.transitive_weight
+            self.pushed_total += 1
 
     def pop_local(self) -> Optional[Task]:
         with self._lock:
@@ -393,7 +478,9 @@ class DequeTaskStorage:
                 self._discard(task)
                 if task.state == TaskState.READY:
                     task.state = TaskState.CLAIMED
+                    self.executed_total += 1
                     return task
+                self.stale_discarded_total += 1
             return None
 
     def steal_batch(self, stealer_id: int, *, half_work: bool = False,
@@ -411,11 +498,34 @@ class DequeTaskStorage:
                 task = self._dq.popleft()
                 self._discard(task)
                 if task.state != TaskState.READY:
+                    self.stale_discarded_total += 1
                     continue
                 task.state = TaskState.CLAIMED
+                self.executed_total += 1
                 stolen.append(task)
                 weight += task.strategy.transitive_weight
             return stolen, weight
+
+    # -- invariants ------------------------------------------------------------
+    def check(self) -> None:
+        """Assert the deque's conservation invariants: the live counters
+        match the entries still queued (stale entries included — they are
+        discounted only when observed), and every pushed entry is accounted
+        to exactly one of executed, stale-discarded or still-queued."""
+        with self._lock:
+            assert self._ready == len(self._dq), \
+                (f"ready_count skew: counter {self._ready} != "
+                 f"{len(self._dq)} queued entries")
+            weight = sum(t.strategy.transitive_weight for t in self._dq)
+            assert self._ready_weight == weight, \
+                (f"ready_weight skew: counter {self._ready_weight} != "
+                 f"{weight} summed over queued entries")
+            assert self.pushed_total == (self.executed_total
+                                         + self.stale_discarded_total
+                                         + len(self._dq)), \
+                (f"conservation violated: pushed {self.pushed_total} != "
+                 f"executed {self.executed_total} + stale "
+                 f"{self.stale_discarded_total} + queued {len(self._dq)}")
 
     @property
     def ready_count(self) -> int:

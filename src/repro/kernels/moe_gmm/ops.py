@@ -8,7 +8,6 @@ import jax
 import jax.numpy as jnp
 
 from .kernel import grouped_swiglu_pallas
-from .ref import grouped_swiglu_ref
 
 __all__ = ["grouped_swiglu"]
 

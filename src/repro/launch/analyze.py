@@ -34,7 +34,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..configs.base import ModelConfig
 from ..models import build_model
 from ..optim.adamw import adamw_init
-from ..sharding.partition import batch_spec, param_shardings, param_specs
+from ..sharding.partition import param_shardings, param_specs
 from ..train.step import make_train_step
 from .hlo_stats import collective_bytes
 from .input_specs import ShapeCell, input_specs, train_microbatches

@@ -17,7 +17,7 @@ half source embeddings (stub audio frontend) / half target tokens.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

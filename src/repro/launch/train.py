@@ -16,7 +16,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..checkpoint import CheckpointManager, latest_step
 from ..configs import get_config, scale_down

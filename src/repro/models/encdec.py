@@ -157,8 +157,8 @@ def encdec_prefill(params: dict, batch: dict, cfg: ModelConfig,
     x = rms_norm(params["ln_f"], x, cfg.norm_eps)
     logits = linear(params["lm_head"], x[:, -1:])
     one = init_kv_cache(cfg, b, s_max, dtype_of(cfg))
-    rep = lambda a: jnp.broadcast_to(
-        a[None], (cfg.num_layers,) + a.shape).copy()
+    def rep(a):
+        return jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape).copy()
     kcache, vcache = rep(one.k), rep(one.v)
     w = min(s, kcache.shape[2])
     cache = EncDecCache(

@@ -21,7 +21,7 @@ from .attention import (KVCache, PagedKVCache, attention_decode,
                         init_attention, init_kv_cache, init_paged_kv_cache)
 from .layers import (dtype_of, embed, init_embedding, init_linear, init_mlp,
                      init_rms_norm, linear, mlp, rms_norm)
-from .moe import MoEStats, init_moe, moe_fwd
+from .moe import init_moe, moe_fwd
 from .ssm import MambaState, init_mamba, mamba_decode, mamba_fwd
 from .transformer import LMOutputs
 
@@ -119,7 +119,8 @@ def _superblock_fwd(p: dict, x: jax.Array, cfg: ModelConfig, positions,
             x = x + out
         x, a = _ffn(layer, x, cfg)
         aux = aux + a
-    stack = lambda xs: jax.tree.map(lambda *a: jnp.stack(a), *xs)
+    def stack(xs):
+        return jax.tree.map(lambda *a: jnp.stack(a), *xs)
     return x, (aux, kv_out, stack(mamba_states) if return_kv else None)
 
 
@@ -145,7 +146,8 @@ def init_hybrid_cache(cfg: ModelConfig, batch: int, s_max: int) -> HybridCache:
     n_mamba = sb - 1
     dt = dtype_of(cfg)
     one = init_kv_cache(cfg, batch, s_max, dt)
-    rep = lambda a: jnp.broadcast_to(a[None], (n_sb,) + a.shape).copy()
+    def rep(a):
+        return jnp.broadcast_to(a[None], (n_sb,) + a.shape).copy()
     return HybridCache(
         kv=KVCache(rep(one.k), rep(one.v)),
         conv=jnp.zeros((n_sb, n_mamba, batch, cfg.mamba_d_conv - 1,
@@ -229,8 +231,9 @@ def hybrid_insert_prefill(cache: HybridCache, dense: HybridCache,
     the engine's contiguous cache.  The batch axis differs per leaf — KV
     carries it on axis 1, Mamba conv/ssm states on axis 2 — so a uniform
     tree-map over one axis would corrupt neighbouring slots' Mamba states."""
-    put = lambda full, one, ax: jax.lax.dynamic_update_slice_in_dim(
-        full, one.astype(full.dtype), slot, ax)
+    def put(full, one, ax):
+        return jax.lax.dynamic_update_slice_in_dim(
+            full, one.astype(full.dtype), slot, ax)
     return HybridCache(
         kv=KVCache(put(cache.kv.k, dense.kv.k, 1),
                    put(cache.kv.v, dense.kv.v, 1)),
@@ -249,7 +252,8 @@ def init_hybrid_paged_cache(cfg: ModelConfig, batch: int, num_blocks: int,
     n_mamba = sb - 1
     dt = dtype_of(cfg)
     one = init_paged_kv_cache(cfg, num_blocks, block_size, dt)
-    rep = lambda a: jnp.broadcast_to(a[None], (n_sb,) + a.shape).copy()
+    def rep(a):
+        return jnp.broadcast_to(a[None], (n_sb,) + a.shape).copy()
     return HybridPagedCache(
         kv=PagedKVCache(rep(one.k), rep(one.v)),
         conv=jnp.zeros((n_sb, n_mamba, batch, cfg.mamba_d_conv - 1,

@@ -7,7 +7,6 @@ the trunk uniform and changes nothing structural).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -142,7 +142,8 @@ def rwkv_time_mix(p: dict, x: jax.Array, cfg: ModelConfig,
     pad = (-t) % c
     if pad:
         # pad with decay-1 / zero-input steps (no-ops for the recurrence)
-        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        def zpad(a):
+            return jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
         r, k, v = zpad(r), zpad(k), zpad(v)
         w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
                     constant_values=1.0)
@@ -164,7 +165,8 @@ def rwkv_time_mix(p: dict, x: jax.Array, cfg: ModelConfig,
             y, s_next = _wkv_chunk(rc, kc, vc, wc, p["u"], s)
             return s_next, y
 
-        resh = lambda a: a.reshape(b, nchunks, c, h, n).swapaxes(0, 1)
+        def resh(a):
+            return a.reshape(b, nchunks, c, h, n).swapaxes(0, 1)
         body_fn = jax.checkpoint(body) if cfg.remat else body
         s_end, ys = jax.lax.scan(body_fn, s0,
                                  (resh(r), resh(k), resh(v), resh(w)),
@@ -265,7 +267,8 @@ def _mamba_scan_chunked(a_t, b_t, h0, chunk: int, remat: bool,
         return hs[:, -1], hs
 
     body_fn = jax.checkpoint(body) if remat else body
-    resh = lambda z: z.reshape(b, nchunks, c, di, ds).swapaxes(0, 1)
+    def resh(z):
+        return z.reshape(b, nchunks, c, di, ds).swapaxes(0, 1)
     h_end, hs = jax.lax.scan(body_fn, h0, (resh(a_t), resh(b_t)),
                              unroll=unroll)
     return hs.swapaxes(0, 1).reshape(b, t_pad, di, ds)[:, :t], h_end

@@ -8,7 +8,7 @@ rematerialization.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -169,8 +169,9 @@ def lm_forward(params: dict, batch: dict, cfg: ModelConfig) -> LMOutputs:
 
 def init_lm_cache(cfg: ModelConfig, batch: int, s_max: int) -> KVCache:
     one = init_kv_cache(cfg, batch, s_max, dtype_of(cfg))
-    stack = lambda a: jnp.broadcast_to(a[None],
-                                       (cfg.num_layers,) + a.shape).copy()
+    def stack(a):
+        return jnp.broadcast_to(a[None],
+                                (cfg.num_layers,) + a.shape).copy()
     return KVCache(stack(one.k), stack(one.v))
 
 
@@ -233,8 +234,9 @@ def init_lm_paged_cache(cfg: ModelConfig, num_blocks: int,
     block table (host-side, ``serving.paged_kv``) is shared across layers —
     block id ``b`` names row ``b`` of every layer's pool."""
     one = init_paged_kv_cache(cfg, num_blocks, block_size, dtype_of(cfg))
-    stack = lambda a: jnp.broadcast_to(a[None],
-                                       (cfg.num_layers,) + a.shape).copy()
+    def stack(a):
+        return jnp.broadcast_to(a[None],
+                                (cfg.num_layers,) + a.shape).copy()
     return PagedKVCache(stack(one.k), stack(one.v))
 
 

@@ -23,7 +23,8 @@ class AdamWState(NamedTuple):
 
 
 def adamw_init(params) -> AdamWState:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return AdamWState(step=jnp.zeros((), jnp.int32),
                       m=jax.tree.map(zeros, params),
                       v=jax.tree.map(zeros, params))

@@ -8,7 +8,6 @@ bytes, which is exactly the term that dominates the multi-pod roofline.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

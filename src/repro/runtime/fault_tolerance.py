@@ -12,7 +12,6 @@ CPU tests verify bit-exact resume.
 """
 from __future__ import annotations
 
-import collections
 import time
 from typing import Callable, Dict, List, Optional
 

@@ -157,8 +157,9 @@ class ServingEngine:
                                    if model.prefill_chunk_paged else None)
             # prompts longer than the ring must take the ring-aligning
             # dense prefill (chunks would wrap mid-prompt)
-            self.batcher.chunk_eligible = \
-                lambda r: r.prompt_len + 1 <= self.cap
+            def _chunk_eligible(r):
+                return r.prompt_len + 1 <= self.cap
+            self.batcher.chunk_eligible = _chunk_eligible
             self.batcher.on_request_pruned = self._on_pruned
         else:
             self.cache = model.init_cache(max_batch, s_max)

@@ -56,6 +56,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.device.request_scheduler import RequestStrategy
 from ..core.strategy import MergePolicy, PriorityStrategy
 from ..core.task import FinishRegion, Task
 from ..core.task_storage import StrategyTaskStorage
@@ -63,7 +64,7 @@ from ..models.model_zoo import Model
 from .paged_kv import SINK_BLOCK
 
 __all__ = ["Speculator", "SpecStrategy", "DraftStrategy", "VerifyStrategy",
-           "accept_longest_prefix", "SPEC_METRIC_KEYS"]
+           "accept_longest_prefix", "SPEC_METRIC_KEYS", "SPEC_KEY_ARITY"]
 
 #: engine metric counters seeded into ``batcher.metrics`` by ``attach``
 SPEC_METRIC_KEYS = ("spec_rounds", "spec_drafted", "spec_accepted",
@@ -74,6 +75,31 @@ SPEC_METRIC_KEYS = ("spec_rounds", "spec_drafted", "spec_accepted",
 #: priorities which are typically small non-negative floats)
 _VERIFY_CLASS = -1.0
 _DRAFT_CLASS = float(2 ** 40)
+
+#: arity of the spec-task priority tuple — MUST match
+#: ``RequestStrategy._key`` so spec and request tasks compose in one
+#: storage without mixed-shape comparisons (checked at import below)
+SPEC_KEY_ARITY = 3
+
+
+def _assert_spec_key_compat() -> None:
+    """The shape-compat contract the PR-6 design hand-maintained, made
+    explicit: ``SpecStrategy`` priorities are ``SPEC_KEY_ARITY``-tuples and
+    ``RequestStrategy._key`` must produce tuples of the same arity, or a
+    mixed storage would compare priorities element-wise across different
+    key layouts (silently corrupting heap order, or raising mid-heap-op).
+    ``repro.analysis.schedlint`` runs the full-cohort version of this."""
+    arity = RequestStrategy.key_arity()
+    if arity != SPEC_KEY_ARITY:
+        raise AssertionError(
+            f"priority-key shape drift: RequestStrategy._key produces "
+            f"{arity}-tuples but spec strategies build "
+            f"{SPEC_KEY_ARITY}-tuples; composed draft/verify/request "
+            f"ordering would be undefined — update SPEC_KEY_ARITY and the "
+            f"SpecStrategy key layout together")
+
+
+_assert_spec_key_compat()
 
 _spec_seq = itertools.count()
 
@@ -104,7 +130,9 @@ class SpecStrategy(PriorityStrategy):
 
     def __init__(self, cls_key: float, steal_class: float, slot: int,
                  weight: int, allow_calls: bool = False):
-        super().__init__(priority=(cls_key, np.inf, float(next(_spec_seq))),
+        key = (cls_key, np.inf, float(next(_spec_seq)))
+        assert len(key) == SPEC_KEY_ARITY
+        super().__init__(priority=key,
                          transitive_weight=weight, allow_calls=allow_calls)
         self.slot = slot
         self.steal_class = steal_class

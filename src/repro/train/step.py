@@ -5,7 +5,6 @@ mesh.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional
 
 import jax

@@ -1,0 +1,236 @@
+"""schedcheck: schedlint rules, interleaving explorer, conservation
+invariants, and the spec-vs-request priority-key shape contract."""
+import pytest
+
+from repro.analysis.interleave import default_schedule, explore
+from repro.analysis.invariants import (EveryN, InvariantViolation,
+                                       check_storage, soft_check)
+from repro.analysis.schedlint import (Cohort, default_cohorts,
+                                      discover_strategies, lint_classes,
+                                      lint_cohort, lint_merge_policy,
+                                      run_lint)
+from repro.core import BaseStrategy, FinishRegion, MergePolicy, \
+    PriorityStrategy, Task
+from repro.core.task import TaskState
+from repro.core.task_storage import DequeTaskStorage, StrategyTaskStorage
+
+
+# --------------------------------------------------------------------------
+# schedlint over the real zoo
+# --------------------------------------------------------------------------
+
+def test_zoo_discovery_finds_all_strategy_classes():
+    names = {c.__name__ for c in discover_strategies()}
+    assert {"BaseStrategy", "FifoStrategy", "PriorityStrategy",
+            "RandomStealStrategy", "DepthFirstStrategy", "MergingStrategy",
+            "RequestStrategy", "FifoRequestStrategy", "CacheAwareStrategy",
+            "SpecStrategy", "DraftStrategy", "VerifyStrategy"} <= names
+
+
+def test_zoo_is_error_clean():
+    errors = [f for f in run_lint() if f.level == "error"]
+    assert errors == [], "\n".join(f.render() for f in errors)
+
+
+def test_lint_catches_nontransitive_comparator():
+    class Cycle(PriorityStrategy):
+        def prioritize(self, other):
+            return (self.priority, other.priority) in \
+                {(0.0, 1.0), (1.0, 2.5), (2.5, 0.0)}
+    rules = {f.rule for f in lint_classes([Cycle]) if f.level == "error"}
+    assert "SL103" in rules
+
+
+def test_lint_findings_carry_file_and_line():
+    class Reflexive(PriorityStrategy):
+        def prioritize(self, other):
+            return self.priority <= other.priority
+    finding = next(f for f in lint_classes([Reflexive])
+                   if f.rule in ("SL101", "SL102"))
+    assert finding.file.endswith("test_analysis.py")
+    assert finding.line > 0
+
+
+def test_lint_flags_shape_clash_in_cohort():
+    class TupleKeyed(PriorityStrategy):
+        def __init__(self, priority, **kw):
+            super().__init__(priority=(float(priority), 0.0), **kw)
+    findings = lint_cohort(Cohort("clash", [PriorityStrategy, TupleKeyed]))
+    assert any(f.level == "error" for f in findings)
+
+
+def test_merge_policy_legality_grid():
+    assert lint_merge_policy(MergePolicy()) == []
+
+    class Overshoot(MergePolicy):
+        def chunk_size(self, queue_depth, remaining):
+            return remaining + 1
+    assert any(f.rule == "SL160" for f in lint_merge_policy(Overshoot()))
+
+
+# --------------------------------------------------------------------------
+# spec-vs-request key shape contract (regression for the PR-6 design note)
+# --------------------------------------------------------------------------
+
+def test_spec_key_arity_matches_request_strategy():
+    from repro.core.device.request_scheduler import RequestStrategy
+    from repro.serving.speculative import (SPEC_KEY_ARITY, DraftStrategy,
+                                           VerifyStrategy,
+                                           _assert_spec_key_compat)
+    assert RequestStrategy.key_arity() == SPEC_KEY_ARITY
+    _assert_spec_key_compat()          # must not raise on the shipped zoo
+    assert len(DraftStrategy("warm", 0).priority) == SPEC_KEY_ARITY
+    assert len(VerifyStrategy(0, [1, 2]).priority) == SPEC_KEY_ARITY
+
+
+def test_spec_key_compat_assertion_fires_on_drift(monkeypatch):
+    from repro.core.device.request_scheduler import RequestStrategy
+    from repro.serving import speculative
+    monkeypatch.setattr(
+        RequestStrategy, "_key",
+        staticmethod(lambda request: (request.priority, request.arrival)))
+    with pytest.raises(AssertionError, match="shape drift"):
+        speculative._assert_spec_key_compat()
+
+
+def test_spec_request_cohort_is_linted():
+    cohorts = {c.name for c in default_cohorts(discover_strategies())}
+    assert "spec-request-compat" in cohorts
+    assert "speculator" in cohorts
+
+
+# --------------------------------------------------------------------------
+# interleaving explorer
+# --------------------------------------------------------------------------
+
+def _small_schedule():
+    return [
+        [("push", 0, 2.0, 1), ("push", 1, 1.0, 2), ("pop",), ("pop",)],
+        [("steal", 1), ("steal", 1)],
+    ]
+
+
+@pytest.mark.parametrize("factory", [
+    lambda: StrategyTaskStorage(0),
+    lambda: DequeTaskStorage(0),
+], ids=["strategy", "deque"])
+def test_explorer_clean_on_real_storages(factory):
+    res = explore(_small_schedule(), factory)
+    assert res.ok
+    assert not res.truncated
+    # 6 ops, 6!/(4!*2!) = 15 interleavings, every one covered
+    assert res.interleavings == 15
+    assert res.states > 0 and res.edges >= res.states - 1
+
+
+def test_explorer_default_schedule_counts_all_interleavings():
+    res = explore(default_schedule(), lambda: StrategyTaskStorage(0))
+    assert res.ok
+    assert res.interleavings == 450_450     # 15! / (7! 4! 4!)
+
+
+def test_explorer_detects_double_delivery():
+    class DoubleDeliver(StrategyTaskStorage):
+        def pop_local(self):
+            t = super().pop_local()
+            if t is not None:
+                return t
+            # refuse to admit emptiness: hand back a claimed task
+            for task in self._log:
+                if task.state == TaskState.CLAIMED:
+                    return task
+            return None
+    res = explore(_small_schedule(), lambda: DoubleDeliver(0))
+    assert not res.ok
+    assert any("double delivery" in v.message or "not CLAIMED" in v.message
+               for v in res.violations)
+
+
+def test_explorer_state_budget_truncates():
+    res = explore(default_schedule(), lambda: StrategyTaskStorage(0),
+                  max_states=10)
+    assert res.truncated
+    assert res.ok                           # truncation is not a violation
+
+
+# --------------------------------------------------------------------------
+# conservation invariants
+# --------------------------------------------------------------------------
+
+def _push_one(storage, strategy=None):
+    region = FinishRegion()
+    region.inc()
+    t = Task(lambda: None, (), {}, strategy or BaseStrategy(place=0), region)
+    storage.push(t)
+    return t
+
+
+def test_storage_ledger_accounts_every_outcome():
+    storage = StrategyTaskStorage(place_id=0)
+    _push_one(storage)
+    dying = PriorityStrategy(priority=0.0, place=0)
+    t2 = _push_one(storage, dying)
+    storage.pop_local()                    # claims the dying one (prio 0)
+    assert t2.state == TaskState.CLAIMED
+    _push_one(storage)
+    check_storage(storage)
+    assert storage.pushed_total == 3
+    assert storage.executed_total == 1
+    assert storage.ready_count == 2
+
+
+def test_storage_check_raises_with_context_on_skew():
+    storage = StrategyTaskStorage(place_id=0)
+    _push_one(storage)
+    storage._ready += 1                    # seed a counter skew
+    with pytest.raises(InvariantViolation, match="ready_count skew"):
+        check_storage(storage)
+    assert soft_check(storage) is not None  # soft flavour collects instead
+
+
+def test_deque_ledger_counts_stale_discards():
+    storage = DequeTaskStorage(place_id=0)
+    a = _push_one(storage)
+    _push_one(storage)
+    a.state = TaskState.CLAIMED            # claimed behind the deque's back
+    storage.pop_local()
+    storage.pop_local()
+    check_storage(storage)
+    assert storage.executed_total == 1
+    assert storage.stale_discarded_total == 1
+
+
+def test_every_n_checker_runs_periodically():
+    storage = StrategyTaskStorage(place_id=0)
+    checker = EveryN(storage, n=4)
+    ran = [checker.tick() for _ in range(8)]
+    assert ran == [True, False, False, False, True, False, False, False]
+    checker.final()
+
+
+def test_router_conservation_under_crash_replay():
+    from repro.cluster import (ClusterRouter, ClusterTelemetry, SimClock,
+                               SimReplica, StealPolicy)
+    from repro.core.device.request_scheduler import Request
+    clock = SimClock()
+    replicas = [SimReplica(i, clock, slots=4) for i in range(3)]
+    router = ClusterRouter(replicas, policy=StealPolicy(),
+                           telemetry=ClusterTelemetry(3), now=clock.now,
+                           debug_invariants=True)
+    for _ in range(6):
+        router.submit(Request(prompt_len=16, max_new_tokens=4))
+    assert router.accepted_total == 6
+    displaced = router.fail_replica(0)     # auto-checks (debug_invariants)
+    assert router.displaced_total == len(displaced)
+    assert router.replayed_total + router.replay_failed_total == \
+        len(displaced)
+    router.check()
+    # seed a lost request: the ledger must notice
+    if router.outstanding:
+        router.outstanding.pop(next(iter(router.outstanding)))
+        with pytest.raises(AssertionError, match="conservation"):
+            router.check()
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))

@@ -18,19 +18,25 @@ from repro.runtime import AutoscalePolicy
 def _pool(n, slots=4, **policy_kw):
     clock = SimClock()
     replicas = [SimReplica(i, clock, slots=slots) for i in range(n)]
+    # debug_invariants: the router re-checks its conservation ledger
+    # (accepted == finished + cancelled + rejected + in_flight, and
+    # displaced == replayed + replay_failed) after every crash replay and
+    # poll in these tests — see repro.analysis.invariants.
     router = ClusterRouter(replicas, policy=StealPolicy(**policy_kw),
                            telemetry=ClusterTelemetry(n), now=clock.now,
-                           seed=0)
+                           seed=0, debug_invariants=True)
     return router, replicas
 
 
 def _track(router, rep_idx, req):
     """Register a directly-submitted request in the router's books (the
-    pattern the router-level steal tests use)."""
+    pattern the router-level steal tests use).  Bypassing ``submit()``
+    means bumping the conservation ledger by hand too."""
     router.replicas[rep_idx].submit(req)
     router.outstanding[req.rid] = req
     router._owner[req.rid] = rep_idx
     router._origin[req.rid] = rep_idx
+    router.accepted_total += 1
 
 
 def _horizon(replicas, requests, utilization=0.8, slots=4):
@@ -90,7 +96,8 @@ def test_crash_replay_finishes_every_request():
     chaos = ChaosSchedule(crashes=(CrashEvent(t=0.3 * horizon, replica=0),
                                    CrashEvent(t=0.5 * horizon, replica=3)))
     tel = run_cluster_sim(6, 500, StealPolicy(amount="half_work"),
-                          utilization=0.8, chaos=chaos, seed=3)
+                          utilization=0.8, chaos=chaos, seed=3,
+                          debug_invariants=True)
     s = tel.summary()
     assert tel.finished == 500                  # nothing lost to the crashes
     assert s["chaos"]["crashes"] == 2
@@ -271,7 +278,7 @@ def test_crash_during_flash_crowd_with_autoscale_finishes_all():
                              target_backlog=2048.0)
     tel = run_cluster_sim(4, 600, StealPolicy(amount="half_work"),
                           utilization=0.7, chaos=chaos, arrival=arrival,
-                          autoscale=policy, seed=9)
+                          autoscale=policy, seed=9, debug_invariants=True)
     s = tel.summary()
     assert tel.finished == 600
     assert s["chaos"]["crashes"] == 2

@@ -277,7 +277,8 @@ def test_router_poll_drops_expired_outstanding():
     """Regression: a deadline-expired queued request must leave
     ``outstanding`` (live-mode drains would otherwise never terminate)."""
     now = [0.0]
-    clock_now = lambda: now[0]
+    def clock_now():
+        return now[0]
     reps = [SimReplica(0, SimClock(), slots=1)]
     router = ClusterRouter(reps, policy=StealPolicy(amount="none"),
                            telemetry=ClusterTelemetry(1), now=clock_now)

@@ -174,7 +174,8 @@ def test_wkv6_initial_state_handoff():
     u = jax.random.normal(ks[4], (h, n)) * 0.1
     y_full, s_full = wkv6(r, k, v, w, u, chunk=8)
     half = t // 2
-    cut = lambda a, sl: a[:, sl]
+    def cut(a, sl):
+        return a[:, sl]
     y1, s1 = wkv6(cut(r, slice(0, half)), cut(k, slice(0, half)),
                   cut(v, slice(0, half)), cut(w, slice(0, half)), u, chunk=8)
     y2, s2 = wkv6(cut(r, slice(half, t)), cut(k, slice(half, t)),

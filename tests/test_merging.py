@@ -1,10 +1,14 @@
 """Dynamic task merging: MergePolicy, spawn_many, MergingStrategy ordering,
-chunk-granular spawn-to-call, batcher admission reuse, sharded metrics."""
+chunk-granular spawn-to-call, batcher admission reuse, sharded metrics.
+
+Storage-facing tests run the conservation ``check()`` on their hot paths
+(chunk tasks must group and balance exactly like plain ones)."""
 import pytest
 
+from repro.analysis.invariants import check_storage
 from repro.core import (BaseStrategy, DepthFirstStrategy, FinishRegion,
                         MergePolicy, MergingStrategy, PriorityStrategy,
-                        SchedulerConfig, SchedulerMetrics, StrategyScheduler,
+                        SchedulerMetrics, StrategyScheduler,
                         WorkStealingScheduler, finish, local_before,
                         spawn_many, steal_before)
 from repro.core.device.request_scheduler import ContinuousBatcher, Request
@@ -159,8 +163,11 @@ def test_merged_chunk_groups_with_representative_type():
     storage.push(Task(lambda: None, (), {},
                       MergingStrategy(rep, merged_count=2), region))
     assert storage._sole_group is not None   # still homogeneous
+    check_storage(storage)                   # chunk grouped, ledger balanced
     best = storage.pop_local()
     assert isinstance(best.strategy, MergingStrategy)  # best priority wins
+    check_storage(storage)
+    assert storage.pushed_total == 4 and storage.executed_total == 1
 
 
 # --------------------------------------------------------------------------
@@ -172,9 +179,11 @@ def test_batcher_merged_prefill_follows_policy():
                           merge_policy=MergePolicy(max_chunk=2))
     for _ in range(6):
         b.submit(Request(prompt_len=4, max_new_tokens=1))
+    check_storage(b.storage)
     plan = b.plan_step()
     assert len(plan.prefill) == 2           # chunk capped by policy
     assert b.waiting_count == 4             # rest requeued for next step
+    check_storage(b.storage)                # requeues balance the ledger
 
 
 def test_batcher_default_policy_admits_up_to_batch():

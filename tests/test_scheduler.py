@@ -1,14 +1,11 @@
 """Core strategy scheduler behaviour."""
-import threading
-import time
-
 import pytest
 
-from repro.core import (BaseStrategy, DepthFirstStrategy, FifoStrategy,
+from repro.core import (BaseStrategy, DepthFirstStrategy,
                         PriorityStrategy, SchedulerConfig, StrategyScheduler,
                         WorkStealingScheduler, finish, get_place, spawn,
                         spawn_s)
-from repro.core.task import FinishRegion, Task, TaskState
+from repro.core.task import FinishRegion, Task
 from repro.core.task_storage import StrategyTaskStorage
 
 

@@ -1,8 +1,6 @@
 """Partition-rule behaviour (on a small real mesh — no fake devices in
 tests)."""
 import jax
-import jax.numpy as jnp
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, scale_down

@@ -1,11 +1,26 @@
 """Task-storage hot paths: compaction/steal-view consistency, homogeneous
-fast path, freelists, deque live counters, steal clamps."""
+fast path, freelists, deque live counters, steal clamps.
+
+Every push/steal in this file runs through the conservation ``check()``
+(periodically in the bulk loops), so the hot paths double as invariant
+regression coverage — see ``repro.analysis.invariants``."""
 import pytest
 
+from repro.analysis.invariants import EveryN, check_storage
 from repro.core import BaseStrategy, PriorityStrategy
 from repro.core.task import FinishRegion, Task, TaskState
 from repro.core.task_storage import (_COMPACT_LOG_LEN, DequeTaskStorage,
                                      StrategyTaskStorage)
+
+_checkers = {}
+
+
+def _checked(storage):
+    """Per-storage periodic invariant checker (full check every 16 ops)."""
+    c = _checkers.get(id(storage))
+    if c is None or c.obj is not storage:
+        c = _checkers[id(storage)] = EveryN(storage, 16)
+    c.tick()
 
 
 def _push(storage, strategy=None, region=None):
@@ -13,6 +28,7 @@ def _push(storage, strategy=None, region=None):
     region.inc()
     t = Task(lambda: None, (), {}, strategy or BaseStrategy(place=0), region)
     storage.push(t)
+    _checked(storage)
     return t
 
 
@@ -22,6 +38,7 @@ def _steal_all(storage, stealer_id):
     while True:
         batch, _w = storage.steal_batch(stealer_id, half_work=False,
                                         max_tasks=1)
+        _checked(storage)
         if not batch:
             return out
         out.extend(batch)
@@ -55,6 +72,7 @@ def test_compact_preserves_multiple_stealer_views():
     before_ready = storage.ready_count
     s3, _ = storage.steal_batch(stealer_id=1, half_work=False, max_tasks=1)
     assert len(storage._log) <= before_ready  # log compacted to live tasks
+    check_storage(storage)                    # conservation across _compact
     taken |= set(map(id, s3))
 
     # Every remaining live task is still reachable by BOTH views, exactly
@@ -69,6 +87,9 @@ def test_compact_preserves_multiple_stealer_views():
     # nothing was ever delivered twice across pops and steals
     all_out = list(map(id, popped + s1 + s2 + s3 + got1))
     assert len(all_out) == len(set(all_out))
+    check_storage(storage)
+    # fully drained: every push is accounted executed (none were dead)
+    assert storage.pushed_total == storage.executed_total == n + 10
 
 
 def test_compact_cannot_resurrect_claimed_tasks():
@@ -84,6 +105,7 @@ def test_compact_cannot_resurrect_claimed_tasks():
     # force a compaction directly: the view keeps its (now all-stale) heap
     storage._compact()
     assert storage._log == []
+    check_storage(storage)
     # a fresh live task must be the ONLY thing the view delivers — every
     # stale CLAIMED entry ahead of it in FIFO order is skipped, not revived
     fresh = _push(storage, region=region)
@@ -108,6 +130,12 @@ def test_stale_view_entries_skipped_after_repush_elsewhere():
     batch, _ = a.steal_batch(stealer_id=2, half_work=False)
     assert batch == [t3]                 # stale t2 entry skipped, not stolen
     assert b.pop_local() is t2
+    # each storage balances its own ledger: t2 counts as executed in BOTH
+    # (claimed out of a, then claimed again out of b after the re-home)
+    check_storage(a)
+    check_storage(b)
+    assert a.pushed_total == 3 and a.executed_total == 3
+    assert b.pushed_total == 1 and b.executed_total == 1
 
 
 # --------------------------------------------------------------------------
@@ -219,6 +247,10 @@ def test_deque_stale_entries_discounted():
     assert storage.ready_count == 0
     stolen, _ = storage.steal_batch(stealer_id=1)
     assert stolen == []                  # early-out: no live work
+    check_storage(storage)
+    # the externally-claimed entry is accounted stale, not executed
+    assert storage.stale_discarded_total == 1
+    assert storage.executed_total == 1
 
 
 def test_deque_steal_half_count_uses_live_count():
@@ -294,6 +326,7 @@ def test_steal_item_freelist_recycles_across_views():
     assert set(seen) == set(map(id, tasks + more))  # nothing lost
     assert storage.ready_count == 0
     assert all(item.task is None for item in storage._steal_free)
+    check_storage(storage)
 
 
 if __name__ == "__main__":
